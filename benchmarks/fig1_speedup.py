@@ -1,0 +1,22 @@
+"""Paper Figure 1 (left column): speedup vs thread count for AsySVRG
+(lock = inconsistent reading / unlock) under the measured-cost model."""
+from __future__ import annotations
+
+from benchmarks.table2_schemes import run as run_table2
+
+
+def run(quick=False):
+    out = run_table2(threads=(1, 2, 4, 6, 8, 10), quick=quick)
+    return out
+
+
+def main(quick=True):
+    out = run(quick=quick)
+    print("name,us_per_call,derived")
+    for r in out["rows"]:
+        print(f"fig1_speedup_{r['scheme']}_p{r['threads']},"
+              f"{r['wall_s'] * 1e6:.1f},speedup={r['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main(quick=False)

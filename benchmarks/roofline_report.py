@@ -1,0 +1,62 @@
+"""Roofline report: render EXPERIMENTS.md §Roofline from the dry-run JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import roofline_terms
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir=DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def render_table(recs, mesh="single"):
+    lines = ["| arch | shape | peak GiB/dev | t_compute | t_memory | "
+             "t_collective | dominant | useful | MFU-UB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["shape"], r["arch"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped: {r['reason'][:40]} | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        t = roofline_terms(r)
+        peak = r["memory"]["peak_per_device_bytes"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {peak:.2f} | "
+            f"{t['t_compute_s']:.2e} | {t['t_memory_s']:.2e} | "
+            f"{t['t_collective_s']:.2e} | {t['dominant']} | "
+            f"{min(t['useful_ratio'], 9.99):.3f} | "
+            f"{t['mfu_upper_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def main(quick=True):
+    recs = load_records()
+    print("name,us_per_call,derived")
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    print(f"roofline_cells,0,ok={n_ok};skipped={n_skip};total={len(recs)}")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = roofline_terms(r)
+        print(f"roofline_{r['mesh']}_{r['arch']}_{r['shape']},"
+              f"{t['step_lower_bound_s'] * 1e6:.1f},"
+              f"dominant={t['dominant']};mfu_ub={t['mfu_upper_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

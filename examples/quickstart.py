@@ -1,0 +1,38 @@
+"""Quickstart: AsySVRG on the paper's own workload (logistic regression).
+
+Reproduces the core claim in ~30 seconds on CPU: AsySVRG (all three reading
+schemes) converges linearly and beats Hogwild! per effective pass.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.config import SVRGConfig
+from repro.core import LogisticRegression, run_asysvrg, run_hogwild
+from repro.data.libsvm import make_synthetic_libsvm
+
+
+def main():
+    ds = make_synthetic_libsvm("rcv1", scale=0.05)
+    obj = LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+    _, f_star = obj.optimum(max_iter=3000)
+    print(f"dataset rcv1-like: n={obj.n} p={obj.p}  f*={f_star:.6f}\n")
+
+    print(f"{'method':28s} {'passes':>7s} {'final gap':>12s}")
+    for scheme in ("consistent", "inconsistent", "unlock"):
+        cfg = SVRGConfig(scheme=scheme, step_size=2.0, num_threads=10, tau=9)
+        res = run_asysvrg(obj, epochs=6, cfg=cfg)
+        gap = res.history[-1] - f_star
+        print(f"AsySVRG-{scheme:20s} {res.effective_passes[-1]:7.0f} "
+              f"{gap:12.3e}")
+
+    res = run_hogwild(obj, epochs=18, step_size=2.0, num_threads=10)
+    gap = res.history[-1] - f_star
+    print(f"{'Hogwild!-unlock':28s} {res.effective_passes[-1]:7.0f} "
+          f"{gap:12.3e}")
+    print("\nAsySVRG reaches a much smaller gap at EQUAL effective passes —")
+    print("the paper's Figure 1 (right) in one table.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.registry import get_config, list_configs, reduced_config
+
+__all__ = ["get_config", "list_configs", "reduced_config"]

@@ -1,0 +1,21 @@
+"""The paper's own workload: L2-regularized logistic regression (paper §5).
+
+Feature dim matches the hashed rcv1 synthesis (repro.data.libsvm); the
+benchmark layer instantiates variants for real-sim/news20 statistics.
+"""
+from repro.config import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(ModelConfig(
+    name="paper-logreg",
+    family="logreg",
+    num_layers=0,
+    d_model=0,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=0,
+    num_features=2048,
+    l2_reg=1e-4,
+))

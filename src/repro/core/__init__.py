@@ -1,0 +1,33 @@
+from repro.core.objective import LogisticRegression
+from repro.core.svrg import svrg_epoch, run_svrg
+from repro.core.asysvrg import (
+    AsyRunResult,
+    asysvrg_epoch,
+    run_asysvrg,
+    make_delay_schedule,
+)
+from repro.core.hogwild import hogwild_epoch, run_hogwild
+from repro.core.compression import (
+    topk_compress,
+    randk_compress,
+    int8_compress,
+    ErrorFeedbackState,
+    compressed_update,
+)
+
+__all__ = [
+    "LogisticRegression",
+    "svrg_epoch",
+    "run_svrg",
+    "AsyRunResult",
+    "asysvrg_epoch",
+    "run_asysvrg",
+    "make_delay_schedule",
+    "hogwild_epoch",
+    "run_hogwild",
+    "topk_compress",
+    "randk_compress",
+    "int8_compress",
+    "ErrorFeedbackState",
+    "compressed_update",
+]

@@ -1,0 +1,129 @@
+"""Gradient compression with error feedback (beyond-paper optimization).
+
+The paper's "unlock" result says: cheaper coordination wins wall-clock even
+at some statistical cost. At pod scale the scarce resource is the inter-pod
+link, so the TPU-native analogue is compressing the reconcile all-reduce.
+Implemented: top-k / random-k sparsification and int8 stochastic
+quantization, each with error feedback (Stich et al. 2018) so the
+compression error is re-injected — preserving convergence the same way the
+paper's τ-bounded staleness does.
+
+All operators work leaf-wise on pytrees and are jit-safe. `compressed_update`
+is the drop-in used by the distributed trainer on the gradient tree before
+the cross-pod reduction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: any    # pytree matching the gradient tree
+
+
+def init_error_feedback(tree) -> ErrorFeedbackState:
+    return ErrorFeedbackState(jax.tree.map(jnp.zeros_like, tree))
+
+
+# ---------------------------------------------------------------------------
+# leaf-wise compressors: x -> (compressed_dense, residual)
+# ---------------------------------------------------------------------------
+
+def _topk_leaf(x, frac: float):
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    kept = flat * mask
+    return kept.reshape(x.shape), (flat - kept).reshape(x.shape)
+
+
+def _randk_leaf(x, frac: float, key):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, int(n * frac))
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    kept = flat * mask * (n / k)          # unbiased scaling
+    return kept.reshape(x.shape), (flat - flat * mask).reshape(x.shape)
+
+
+def _int8_leaf(x, key):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(x / scale + noise), -127, 127)
+    deq = q * scale
+    return deq, x - deq
+
+
+def topk_compress(tree, frac: float):
+    """Returns (compressed tree, residual tree)."""
+    pairs = jax.tree.map(lambda x: _topk_leaf(x, frac), tree)
+    comp = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return comp, res
+
+
+def _split_keys(key, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+def randk_compress(tree, frac: float, key):
+    keys = _split_keys(key, tree)
+    pairs = jax.tree.map(lambda x, k: _randk_leaf(x, frac, k), tree, keys)
+    comp = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return comp, res
+
+
+def int8_compress(tree, key):
+    keys = _split_keys(key, tree)
+    pairs = jax.tree.map(_int8_leaf, tree, keys)
+    comp = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+    return comp, res
+
+
+def compressed_update(grads, ef: ErrorFeedbackState, method: str,
+                      frac: float, key) -> Tuple[any, ErrorFeedbackState]:
+    """Error-feedback compression: compress(g + residual); carry the error.
+
+    Returns (to_transmit, new_ef). `to_transmit` is what enters the
+    cross-pod all-reduce; with method="none" it is `grads` unchanged.
+    """
+    if method == "none":
+        return grads, ef
+    corrected = jax.tree.map(jnp.add, grads, ef.residual)
+    if method == "topk":
+        comp, res = topk_compress(corrected, frac)
+    elif method == "randk":
+        comp, res = randk_compress(corrected, frac, key)
+    elif method == "int8":
+        comp, res = int8_compress(corrected, key)
+    else:
+        raise ValueError(f"unknown compression {method!r}")
+    return comp, ErrorFeedbackState(res)
+
+
+def compressed_bytes(tree, method: str, frac: float) -> int:
+    """Wire-size estimate of the compressed payload (for the roofline's
+    collective term): topk/randk send k (value+index) pairs; int8 sends
+    1 byte/elem + scale."""
+    total = 0
+    for x in jax.tree.leaves(tree):
+        n = 1
+        for d in x.shape:
+            n *= int(d)
+        if method == "none":
+            total += 4 * n
+        elif method in ("topk", "randk"):
+            k = max(1, int(n * frac))
+            total += k * (4 + 4)
+        elif method == "int8":
+            total += n + 4
+    return total

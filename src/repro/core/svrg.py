@@ -1,0 +1,64 @@
+"""Sequential SVRG (Johnson & Zhang 2013) — the τ=0 oracle.
+
+The paper states: "If τ=0, the algorithm AsySVRG degenerates to the
+sequential (single-thread) version of SVRG." This module IS that degenerate
+case, used (a) as the single-thread baseline for the speedup metric and
+(b) as the bit-exact oracle the delay engine must match at τ=0
+(tested in tests/test_asysvrg_schemes.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import LogisticRegression
+
+
+class SVRGEpochStats(NamedTuple):
+    w: jnp.ndarray
+    obj: jnp.ndarray
+    effective_passes: jnp.ndarray
+
+
+def svrg_epoch(obj: LogisticRegression, w, key, step_size: float,
+               num_inner: int, option: int = 2):
+    """One outer iteration of Algorithm 1 with p=1.
+
+    u_0 = w; full gradient μ = ∇f(w); num_inner inner updates
+    v_m = ∇f_{i_m}(u_m) − ∇f_{i_m}(u_0) + μ ;  u_{m+1} = u_m − η v_m.
+    Option 1 returns the last iterate, option 2 the average (the paper's
+    analysis uses option 2).
+    """
+    mu = obj.full_grad(w)
+    u0 = w
+    idx = jax.random.randint(key, (num_inner,), 0, obj.n)
+
+    def body(carry, i):
+        u, acc = carry
+        v = obj.sample_grad(u, i) - obj.sample_grad(u0, i) + mu
+        u_next = u - step_size * v
+        return (u_next, acc + u), None
+
+    (u_last, acc), _ = jax.lax.scan(body, (u0, jnp.zeros_like(u0)), idx)
+    if option == 1:
+        return u_last
+    return acc / num_inner
+
+
+def run_svrg(obj: LogisticRegression, epochs: int, step_size: float,
+             num_inner: Optional[int] = None, option: int = 2,
+             seed: int = 0, w0=None):
+    """Run SVRG for `epochs` outer iterations; returns (w, per-epoch loss)."""
+    num_inner = num_inner or 2 * obj.n
+    w = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+    key = jax.random.PRNGKey(seed)
+    history = [float(obj.loss(w))]
+    epoch_fn = jax.jit(
+        lambda w, k: svrg_epoch(obj, w, k, step_size, num_inner, option))
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        w = epoch_fn(w, sub)
+        history.append(float(obj.loss(w)))
+    return w, history

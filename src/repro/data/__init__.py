@@ -1,0 +1,16 @@
+from repro.data.synthetic_lm import SyntheticLMDataset, lm_batch_specs
+from repro.data.libsvm import (
+    LogRegDataset,
+    make_synthetic_libsvm,
+    parse_libsvm_file,
+    PAPER_DATASETS,
+)
+
+__all__ = [
+    "SyntheticLMDataset",
+    "lm_batch_specs",
+    "LogRegDataset",
+    "make_synthetic_libsvm",
+    "parse_libsvm_file",
+    "PAPER_DATASETS",
+]

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot spots. Each subpackage:
+#   kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+#   ops.py    — jit'd public wrapper (pytree handling, padding, dispatch)
+#   ref.py    — pure-jnp oracle used by the allclose test sweeps
+#
+# Kernels are validated in interpret=True mode on CPU (this container);
+# compiled mode targets TPU v5e.

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for causal (optionally windowed) attention.
+
+Shapes: q [B, H, S, d], k/v [B, H, S, d] (GQA expansion happens in ops.py).
+Softmax in float32. window=0 means global causal.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    B, H, S, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= pos_q >= pos_k
+    if window > 0:
+        ok &= (pos_q - pos_k) < window
+    scores = jnp.where(ok[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)

@@ -1,0 +1,31 @@
+"""Public fused logreg-gradient op: padding + dispatch + λw term."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.logreg_grad.kernel import (
+    BLOCK_B, BLOCK_P, grad_accum, margins)
+from repro.kernels.logreg_grad.ref import logreg_grad_ref
+
+
+def _use_kernel() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def logreg_grad(X, y, w, l2: float, interpret: bool = False,
+                force_kernel: bool = False):
+    if not (force_kernel or _use_kernel()):
+        return logreg_grad_ref(X, y, w, l2)
+    B, P = X.shape
+    padB = (-B) % BLOCK_B
+    padP = (-P) % BLOCK_P
+    Xp = jnp.pad(X, ((0, padB), (0, padP)))
+    yp = jnp.pad(y, (0, padB))[:, None]
+    wp = jnp.pad(w, (0, padP))[:, None]
+    c = margins(Xp, yp, wp, interpret=interpret)
+    # padded rows contribute c = −0·σ(...)  = 0 exactly (y padded with 0);
+    # margins normalized by 1/(B+padB) — rescale to the true 1/B
+    c = c * ((B + padB) / B)
+    g = grad_accum(Xp, c, interpret=interpret)[:P, 0]
+    return g + l2 * w

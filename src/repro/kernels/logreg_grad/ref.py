@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: minibatch logistic-regression gradient (paper §5).
+
+    g = −(1/B) Xᵀ (y · σ(−y · Xw)) + λ w
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logreg_grad_ref(X, y, w, l2: float):
+    z = X @ w
+    s = jax.nn.sigmoid(-y * z)
+    return -(X.T @ (y * s)) / X.shape[0] + l2 * w

@@ -1,0 +1,3 @@
+from repro.kernels.svrg_update import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

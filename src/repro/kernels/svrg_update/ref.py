@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused SVRG control-variate update.
+
+    u' = u − lr · (g − g0 + gf + wd·u)
+
+This is Algorithm 1's inner update (Eq. 2 + the u-step) with optional decoupled
+weight decay. The fused kernel must match this to float32 precision.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def svrg_update_ref(u, g, g0, gf, lr, wd: float = 0.0):
+    v = g - g0 + gf
+    if wd:
+        v = v + wd * u
+    return (u - lr * v).astype(u.dtype)

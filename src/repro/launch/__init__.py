@@ -1,0 +1,2 @@
+# Launch layer: mesh factory, multi-pod dry-run driver, roofline extractor,
+# and the train/serve CLI entry points.

@@ -1,0 +1,29 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax init,
+and smoke tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16)=(data,model) single pod (256 chips) or
+    (2,16,16)=(pod,data,model) for 2 pods (512 chips).
+
+    The same axis names scale to N pods — the `pod` axis composes with
+    `data` in the sharding rules (see repro/sharding/rules.py), so a
+    (8,16,16) 2048-chip mesh needs no model-code changes."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (CPU smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,2 @@
+# Model zoo: one module per family; repro.models.factory dispatches on
+# ModelConfig.family.

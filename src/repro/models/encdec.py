@@ -1,0 +1,263 @@
+"""Encoder-decoder family (whisper-large-v3 backbone).
+
+The audio frontend (mel + 2x conv) is a STUB per the assignment: the input
+pipeline / input_specs() supply precomputed frame embeddings
+[B, encoder_seq, encoder_feature_dim]; a learned input projection maps them
+to d_model. Sinusoidal positions are used for BOTH encoder and decoder
+(whisper uses a 448-entry learned table for the decoder — swapped for
+sinusoids so the 32k-decode dry-run cells are well-defined; recorded as a
+deviation in configs/whisper_large_v3.py).
+
+Whisper details kept: pre-LN layernorm, GELU (non-GLU) MLP, biases on,
+MHA (num_kv_heads == num_heads), tied embeddings, no RoPE.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as nn
+from repro.models import transformer as tf
+from repro.sharding.context import constrain
+from repro.sharding.rules import ParamDef
+
+
+def _sinusoid(positions, dim: int):
+    """[B,S] -> [B,S,dim] f32 sinusoidal embeddings."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(1, half - 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_defs(cfg: ModelConfig, L: int, dtype: str) -> Dict:
+    D, N, K, h = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamDef((L, D, N, h), ("layers", "embed", "heads", "head_dim"), dtype=dtype),
+        "wk": ParamDef((L, D, K, h), ("layers", "embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": ParamDef((L, D, K, h), ("layers", "embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": ParamDef((L, N, h, D), ("layers", "heads", "head_dim", "embed"), dtype=dtype),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = ParamDef((L, N, h), ("layers", "heads", "head_dim"), "zeros", dtype=dtype)
+        p["bk"] = ParamDef((L, K, h), ("layers", "kv_heads", "head_dim"), "zeros", dtype=dtype)
+        p["bv"] = ParamDef((L, K, h), ("layers", "kv_heads", "head_dim"), "zeros", dtype=dtype)
+    if cfg.use_bias:
+        p["bo"] = ParamDef((L, D), ("layers", "embed"), "zeros", dtype=dtype)
+    return p
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    dt = cfg.param_dtype
+    D, V, F = cfg.d_model, cfg.vocab_size, cfg.encoder_feature_dim
+    Le, Ld = cfg.encoder_layers, cfg.num_layers
+    dec_blocks = tf.block_param_defs(cfg, Ld, dt)
+    dec_blocks["xattn_norm"] = tf._norm_defs((Ld, D), cfg, dt)
+    dec_blocks["xattn"] = _xattn_defs(cfg, Ld, dt)
+    return {
+        "tok_embed": ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt),
+        "enc_in_proj": ParamDef((F, D), ("embed_no_fsdp", None), dtype=dt),
+        "enc_blocks": tf.block_param_defs(cfg, Le, dt),
+        "enc_final_norm": tf._norm_defs((D,), cfg, dt),
+        "dec_blocks": dec_blocks,
+        "final_norm": tf._norm_defs((D,), cfg, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def enc_seq_padded(cfg: ModelConfig, pad_to: int = 16) -> int:
+    """Encoder frames padded up to a TP-shardable length (1500 -> 1504):
+    1500 does not divide a 16-way axis, which replicated every encoder
+    score tensor (+8 GiB/device on whisper train_4k). Padded keys carry
+    position -BIG and are masked in _mask_bias."""
+    return -(-cfg.encoder_seq // pad_to) * pad_to
+
+
+def encode(cfg: ModelConfig, params, enc_feats):
+    """enc_feats [B, S_enc, F] (stub frontend output) -> [B, S_pad, D]."""
+    B, S, _ = enc_feats.shape
+    Sp = enc_seq_padded(cfg)
+    pad = Sp - S
+    if pad:
+        enc_feats = jnp.pad(enc_feats, ((0, 0), (0, pad), (0, 0)))
+    pos = jnp.where(jnp.arange(Sp) < S, jnp.arange(Sp), -(1 << 30))
+    pos = jnp.broadcast_to(pos.astype(jnp.int32)[None, :], (B, Sp))
+    h = jnp.einsum("bsf,fd->bsd", enc_feats.astype(jnp.dtype(cfg.dtype)),
+                   params["enc_in_proj"].astype(jnp.dtype(cfg.dtype)))
+    h = h + _sinusoid(jnp.maximum(pos, 0), cfg.d_model).astype(h.dtype)
+
+    def body(carry, lp):
+        carry = constrain(carry, tf.RESIDUAL_AXES)
+        x = nn.apply_norm(cfg, carry, lp["attn_norm"])
+        q, k, v = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+        out = nn.attention(q, k, v, pos, pos, causal=False, window=0)
+        carry = carry + nn.attn_output(out, lp["attn"], cfg.use_bias)
+        x = nn.apply_norm(cfg, carry, lp["mlp_norm"])
+        return constrain(carry + nn.mlp(x, lp["mlp"], cfg),
+                         tf.RESIDUAL_AXES), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return nn.apply_norm(cfg, h, params["enc_final_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_block(cfg, lp, h, pos, enc_out, enc_pos, self_kv=None, pos_k=None):
+    # causal self-attention
+    x = nn.apply_norm(cfg, h, lp["attn_norm"])
+    q, k, v = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+    k_new, v_new = k, v
+    if self_kv is not None:
+        k, v = self_kv
+        pk = pos_k
+    else:
+        pk = pos
+    out = nn.attention(q, k, v, pos, pk, causal=True, window=0, chunk_q=2048)
+    h = h + nn.attn_output(out, lp["attn"], cfg.use_bias)
+    # cross-attention to encoder states
+    x = nn.apply_norm(cfg, h, lp["xattn_norm"])
+    q = jnp.einsum("bsd,dnh->bsnh", x, lp["xattn"]["wq"])
+    if cfg.use_qkv_bias:
+        q = q + lp["xattn"]["bq"]
+    ek = jnp.einsum("bsd,dkh->bskh", enc_out, lp["xattn"]["wk"])
+    ev = jnp.einsum("bsd,dkh->bskh", enc_out, lp["xattn"]["wv"])
+    if cfg.use_qkv_bias:
+        ek = ek + lp["xattn"]["bk"]
+        ev = ev + lp["xattn"]["bv"]
+    out = nn.attention(q, ek, ev, pos, enc_pos, causal=False, window=0,
+                       chunk_q=2048)
+    h = h + nn.attn_output(out, lp["xattn"], cfg.use_bias)
+    # MLP
+    x = nn.apply_norm(cfg, h, lp["mlp_norm"])
+    return h + nn.mlp(x, lp["mlp"], cfg), (k_new, v_new)
+
+
+def _enc_positions(cfg, B, Sp):
+    p = jnp.where(jnp.arange(Sp) < cfg.encoder_seq, jnp.arange(Sp), -(1 << 30))
+    return jnp.broadcast_to(p.astype(jnp.int32)[None, :], (B, Sp))
+
+
+def _decoder_hidden(cfg, params, tokens, enc_out, collect_cache=False):
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    enc_pos = _enc_positions(cfg, B, enc_out.shape[1])
+    h = jnp.take(params["tok_embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    h = h + _sinusoid(pos, cfg.d_model).astype(h.dtype)
+
+    def body(carry, lp):
+        carry = constrain(carry, tf.RESIDUAL_AXES)
+        out, kv = _dec_block(cfg, lp, carry, pos, enc_out, enc_pos)
+        return constrain(out, tf.RESIDUAL_AXES), kv
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, kvs = jax.lax.scan(body, h, params["dec_blocks"])
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    if collect_cache:
+        return h, kvs
+    return h
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["enc_feats"])
+    h = _decoder_hidden(cfg, params, batch["tokens"], enc_out)
+    return nn.lm_loss(h, params["tok_embed"], batch["targets"], batch["mask"])
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    L, K, h = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    Se = enc_seq_padded(cfg)
+    ax = ("layers", "batch", "cache_kv", "seq_shard", "head_dim")
+    return {
+        "k": ParamDef((L, batch, K, seq_len, h), ax, "zeros", dtype=cfg.dtype),
+        "v": ParamDef((L, batch, K, seq_len, h), ax, "zeros", dtype=cfg.dtype),
+        "xk": ParamDef((L, batch, K, Se, h), ax, "zeros", dtype=cfg.dtype),
+        "xv": ParamDef((L, batch, K, Se, h), ax, "zeros", dtype=cfg.dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params, enc_feats, tokens, cache_len: int):
+    """Encode audio + run decoder prompt; returns logits + all caches."""
+    enc_out = encode(cfg, params, enc_feats)
+    h, kvs = _decoder_hidden(cfg, params, tokens, enc_out, collect_cache=True)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1, :], params["tok_embed"])
+
+    def pad_cache(x):  # [L,B,S,K,h] -> [L,B,K,cache_len,h]
+        x = x.transpose(0, 1, 3, 2, 4)
+        pad = cache_len - x.shape[3]
+        return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.dtype(cfg.dtype))
+
+    # cross K/V computed once from encoder output, per decoder layer
+    def xkv(wk, wv, bk=None, bv=None):
+        ek = jnp.einsum("bsd,ldkh->lbksh", enc_out, wk)
+        ev = jnp.einsum("bsd,ldkh->lbksh", enc_out, wv)
+        if bk is not None:
+            ek = ek + bk[:, None, :, None, :]
+            ev = ev + bv[:, None, :, None, :]
+        return ek.astype(jnp.dtype(cfg.dtype)), ev.astype(jnp.dtype(cfg.dtype))
+
+    xa = params["dec_blocks"]["xattn"]
+    ek, ev = xkv(xa["wk"], xa["wv"], xa.get("bk"), xa.get("bv"))
+    return logits.astype(jnp.float32), {
+        "k": pad_cache(kvs[0]), "v": pad_cache(kvs[1]), "xk": ek, "xv": ev}
+
+
+def decode_step(cfg: ModelConfig, params, cache: Dict, tokens, pos_scalar):
+    B = tokens.shape[0]
+    S = cache["k"].shape[3]
+    Se = cache["xk"].shape[3]
+    pos_q = jnp.broadcast_to(pos_scalar[None, None], (B, 1)).astype(jnp.int32)
+    pos_k = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    enc_pos = _enc_positions(cfg, B, Se)
+    h = jnp.take(params["tok_embed"], tokens[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    h = h + _sinusoid(pos_q, cfg.d_model).astype(h.dtype)
+
+    def body(carry, xs):
+        hh, ck_all, cv_all = carry
+        lp, xk, xv, i = xs
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        x = nn.apply_norm(cfg, hh, lp["attn_norm"])
+        q, k, v = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.transpose(0, 2, 1, 3).astype(ck.dtype), pos_scalar, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.transpose(0, 2, 1, 3).astype(cv.dtype), pos_scalar, axis=2)
+        out = nn.attention(q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                           pos_q, pos_k, causal=True, window=0)
+        hh = hh + nn.attn_output(out, lp["attn"], cfg.use_bias)
+        x = nn.apply_norm(cfg, hh, lp["xattn_norm"])
+        q = jnp.einsum("bsd,dnh->bsnh", x, lp["xattn"]["wq"])
+        if cfg.use_qkv_bias:
+            q = q + lp["xattn"]["bq"]
+        out = nn.attention(q, xk.transpose(0, 2, 1, 3), xv.transpose(0, 2, 1, 3),
+                           pos_q, enc_pos, causal=False, window=0)
+        hh = hh + nn.attn_output(out, lp["xattn"], cfg.use_bias)
+        x = nn.apply_norm(cfg, hh, lp["mlp_norm"])
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+        return (hh + nn.mlp(x, lp["mlp"], cfg), ck_all, cv_all), None
+
+    (h, nk, nv), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["dec_blocks"], cache["xk"], cache["xv"],
+         jnp.arange(cfg.num_layers)))
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, 0, :], params["tok_embed"])
+    return logits.astype(jnp.float32), {"k": nk, "v": nv,
+                                        "xk": cache["xk"], "xv": cache["xv"]}

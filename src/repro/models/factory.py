@@ -1,0 +1,157 @@
+"""Model factory: dispatch ModelConfig.family -> family module, and build
+uniform (loss_fn, prefill, decode_step, param_defs, cache_defs, input_specs)
+bundles consumed by the train loop, serve loop and dry-run driver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.sharding.rules import batch_pspec, defs_to_shape_structs
+
+
+@dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    param_defs: Any                      # ParamDef pytree
+    loss_fn: Callable                    # (params, batch) -> scalar
+    prefill_fn: Optional[Callable]       # (params, batch, cache_len) -> (logits, cache)
+    decode_fn: Optional[Callable]        # (params, cache, tokens, pos) -> (logits, cache)
+    cache_defs: Optional[Callable]       # (batch, seq) -> ParamDef pytree
+    input_specs: Callable                # (shape_cfg, mesh) -> batch of ShapeDtypeStructs
+    make_inputs: Callable                # (shape_cfg, key) -> concrete small batch
+
+
+def _lm_inputs(cfg: ModelConfig, b: int, s: int, mesh=None, concrete=False,
+               key=None, extra: Dict = None):
+    """Token batch (+ modality stubs) as ShapeDtypeStructs or concrete arrays."""
+    def mk(shape, dtype, maxval=None):
+        if concrete:
+            if dtype == jnp.int32:
+                return jax.random.randint(key, shape, 0, maxval or cfg.vocab_size)
+            return jnp.ones(shape, dtype)
+        sharding = None
+        if mesh is not None:
+            sharding = NamedSharding(mesh, batch_pspec(mesh))
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+    batch = {
+        "tokens": mk((b, s), jnp.int32),
+        "targets": mk((b, s), jnp.int32),
+        "mask": mk((b, s), jnp.float32),
+    }
+    for name, shape in (extra or {}).items():
+        batch[name] = mk((b,) + shape, jnp.bfloat16 if not concrete else jnp.float32)
+    return batch
+
+
+def _modality_extra(cfg: ModelConfig) -> Dict:
+    """Stub frontend tensors supplied by the input pipeline (see DESIGN §5)."""
+    if cfg.family == "encdec":
+        return {"enc_feats": (cfg.encoder_seq, cfg.encoder_feature_dim)}
+    if cfg.family == "vlm":
+        return {"image_embeds": (cfg.num_image_tokens, cfg.image_embed_dim)}
+    return {}
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense",):
+        from repro.models import transformer as mod
+    elif fam == "moe":
+        from repro.models import moe as mod
+    elif fam == "encdec":
+        from repro.models import encdec as mod
+    elif fam == "vlm":
+        from repro.models import vlm as mod
+    elif fam == "hybrid":
+        from repro.models import rglru as mod
+    elif fam == "ssm":
+        from repro.models import mamba as mod
+    elif fam == "logreg":
+        return _build_logreg(cfg)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    extra = _modality_extra(cfg)
+    act_dtype = jnp.dtype(cfg.dtype)
+
+    def _cast(params):
+        """f32 master params -> activation-dtype compute copies (the cast is
+        inside the grad, so gradients come back in f32)."""
+        return jax.tree.map(
+            lambda x: x.astype(act_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+    def loss_fn(params, batch):
+        return mod.loss_fn(cfg, _cast(params), batch)
+
+    def prefill_fn(params, batch, cache_len):
+        params = _cast(params)
+        if fam == "encdec":
+            return mod.prefill(cfg, params, batch["enc_feats"],
+                               batch["tokens"], cache_len)
+        if fam == "vlm":
+            return mod.prefill(cfg, params, batch["tokens"],
+                               batch["image_embeds"], cache_len)
+        return mod.prefill(cfg, params, batch["tokens"], cache_len)
+
+    def decode_fn(params, cache, tokens, pos):
+        return mod.decode_step(cfg, _cast(params), cache, tokens, pos)
+
+    def cache_defs(batch, seq):
+        return mod.cache_defs(cfg, batch, seq)
+
+    def input_specs(shape_cfg: ShapeConfig, mesh=None):
+        return _lm_inputs(cfg, shape_cfg.global_batch, shape_cfg.seq_len,
+                          mesh=mesh, extra=extra)
+
+    def make_inputs(shape_cfg: ShapeConfig, key):
+        return _lm_inputs(cfg, shape_cfg.global_batch, shape_cfg.seq_len,
+                          concrete=True, key=key, extra=extra)
+
+    return ModelBundle(cfg=cfg, param_defs=mod.param_defs(cfg),
+                       loss_fn=loss_fn, prefill_fn=prefill_fn,
+                       decode_fn=decode_fn, cache_defs=cache_defs,
+                       input_specs=input_specs, make_inputs=make_inputs)
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload as a "model": logistic regression
+# ---------------------------------------------------------------------------
+
+def _build_logreg(cfg: ModelConfig) -> ModelBundle:
+    from repro.sharding.rules import ParamDef
+
+    defs = {"w": ParamDef((cfg.num_features,), ("features",), "zeros")}
+
+    def loss_fn(params, batch):
+        w = params["w"]
+        margins = batch["y"] * (batch["X"] @ w)
+        return (jnp.mean(jnp.logaddexp(0.0, -margins))
+                + 0.5 * cfg.l2_reg * jnp.vdot(w, w))
+
+    def input_specs(shape_cfg: ShapeConfig, mesh=None):
+        b = shape_cfg.global_batch
+        sharding = None
+        if mesh is not None:
+            sharding = NamedSharding(mesh, batch_pspec(mesh))
+        return {
+            "X": jax.ShapeDtypeStruct((b, cfg.num_features), jnp.float32,
+                                      sharding=sharding),
+            "y": jax.ShapeDtypeStruct((b,), jnp.float32, sharding=sharding),
+        }
+
+    def make_inputs(shape_cfg: ShapeConfig, key):
+        b = shape_cfg.global_batch
+        return {"X": jax.random.normal(key, (b, cfg.num_features)),
+                "y": jnp.sign(jax.random.normal(key, (b,)) + 0.1)}
+
+    return ModelBundle(cfg=cfg, param_defs=defs, loss_fn=loss_fn,
+                       prefill_fn=None, decode_fn=None, cache_defs=None,
+                       input_specs=input_specs, make_inputs=make_inputs)

@@ -1,0 +1,249 @@
+"""Shared neural-net layers (pure-function style, explicit param dicts).
+
+Everything here is jit/pjit-safe and shape-polymorphic over batch/seq. The
+attention implementation has two paths:
+
+  * full einsum for short sequences (<= chunk threshold)
+  * a q-chunked lax.scan ("flash-style" online softmax is NOT needed since we
+    keep the full key length per chunk; chunking bounds the [Cq, S] score
+    block so 32k-prefill activations fit HBM)
+
+GQA is native: q heads grouped over kv heads. Masks are computed from
+position vectors per block — an explicit [S, S] mask is never materialized.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.context import constrain, constrain_heads_or_seq
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, x, p: Dict):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_table(positions, dim: int, theta: float):
+    """positions [..., S] -> (sin, cos) [..., S, dim/2], f32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x [B, S, N, H]; neox-style rotate-half on the first
+    rope_fraction*head_dim dims (chatglm '2d rope' = fraction 0.5)."""
+    if cfg.rope_style == "none":
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * cfg.rope_fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    sin, cos = rope_table(positions, rot, cfg.rope_theta)   # [B, S, rot/2]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(pos_q, pos_k, causal: bool, window, dtype):
+    """Additive mask [B, 1, 1, Q, S] from position vectors [B,Q], [B,S].
+
+    `window` may be a python int or a traced int32 scalar (scan-over-layers
+    passes the per-layer local window; 0 means global)."""
+    ok = pos_k[:, None, :] >= 0          # negative key position = padding
+    if causal:
+        ok &= pos_q[:, :, None] >= pos_k[:, None, :]
+    window = jnp.asarray(window, jnp.int32)
+    dist = pos_q[:, :, None] - pos_k[:, None, :]
+    ok &= jnp.where(window > 0, dist < window, True)
+    bias = jnp.where(ok, 0.0, -1e30).astype(dtype)
+    return bias[:, None, None, :, :]
+
+
+def _attend_block(q, k, v, bias, softcap: float = 0.0):
+    """q [B,Q,K,G,h], k/v [B,S,K,h], bias [B,1,1,Q,S] -> [B,Q,K,G,h]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = scores.astype(jnp.float32) + bias.astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def attention(q, k, v, pos_q, pos_k, *, causal: bool = True,
+              window: int = 0, chunk_q: int = 2048, softcap: float = 0.0):
+    """GQA attention. q [B,Q,N,h] with N = K*G heads; k/v [B,S,K,h].
+
+    For Q > chunk_q the query dim is scanned in blocks so the peak score
+    buffer is [B,K,G,chunk,S] — the 32k-prefill memory-fit path.
+    """
+    B, Q, N, h = q.shape
+    K = k.shape[2]
+    G = N // K
+    if Q > 1:
+        # shard the f32 score tensors: by heads when divisible, else by seq
+        q = constrain_heads_or_seq(q, "heads")
+        k = constrain_heads_or_seq(k, "kv_heads")
+        v = constrain_heads_or_seq(v, "kv_heads")
+    qg = q.reshape(B, Q, K, G, h)
+
+    if Q <= chunk_q:
+        bias = _mask_bias(pos_q, pos_k, causal, window, jnp.float32)
+        out = _attend_block(qg, k, v, bias, softcap)
+        return out.reshape(B, Q, N, h)
+
+    assert Q % chunk_q == 0, (Q, chunk_q)
+    nchunks = Q // chunk_q
+    if nchunks <= 4:
+        # UNROLLED q-chunk loop (train path, 2 chunks): a lax.scan here
+        # stacks per-chunk f32 residuals for the backward pass
+        # (+16 GiB/device on qwen3 train_4k).
+        outs = []
+        for i in range(nchunks):
+            qc = qg[:, i * chunk_q:(i + 1) * chunk_q]
+            pqc = pos_q[:, i * chunk_q:(i + 1) * chunk_q]
+            bias = _mask_bias(pqc, pos_k, causal, window, jnp.float32)
+            outs.append(_attend_block(qc, k, v, bias, softcap))
+        out = jnp.concatenate(outs, axis=1)
+        return out.reshape(B, Q, N, h)
+
+    # SCANNED q-chunk loop (32k prefill, 16 chunks, inference-only): unrolled
+    # chunks let the scheduler hold many score blocks live (+29 GiB/device on
+    # chatglm prefill_32k); the scan serializes them.
+    qs = qg.reshape(B, nchunks, chunk_q, K, G, h).transpose(1, 0, 2, 3, 4, 5)
+    pq = pos_q.reshape(B, nchunks, chunk_q).transpose(1, 0, 2)
+
+    def body(_, inp):
+        qc, pqc = inp
+        bias = _mask_bias(pqc, pos_k, causal, window, jnp.float32)
+        return None, _attend_block(qc, k, v, bias, softcap)
+
+    _, outs = jax.lax.scan(body, None, (qs, pq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Q, K, G, h)
+    return out.reshape(B, Q, N, h)
+
+
+def gqa_project(x, p: Dict, cfg: ModelConfig, use_bias: bool):
+    """x [B,S,d] -> q [B,S,N,h], k/v [B,S,K,h]."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if use_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def attn_output(out, p: Dict, use_bias: bool):
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    if use_bias:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def mlp(x, p: Dict, cfg: ModelConfig):
+    if cfg.glu:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = _act(cfg.activation, gate) * up
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        if cfg.use_bias:
+            h = h + p["b_up"]
+        h = _act(cfg.activation, h)
+    h = constrain(h, ("batch", None, "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if cfg.use_bias:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes full [B,S,V] logits in f32)
+# ---------------------------------------------------------------------------
+
+def lm_loss(hidden, embed, targets, mask, *, chunk: int = 512,
+            softcap: float = 0.0):
+    """Mean token cross-entropy; logits computed seq-chunk-wise inside a scan
+    so peak logits memory is [B, chunk, V]. The chunk body is rematerialized
+    (otherwise the backward saves every chunk's [B,chunk,V] f32 logits —
+    observed +4 GiB/device on gemma3's 262k vocab)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S  # fallback: single block
+    n = S // chunk
+    hs = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        h, t, m = inp
+        # constrain INSIDE the scan so the embedding-grad loop accumulator
+        # inherits the vocab sharding (else it is a replicated f32 [V, D])
+        emb = constrain(embed, ("vocab", None))
+        logits = jnp.einsum("bsd,vd->bsv", h, emb).astype(jnp.float32)
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0)

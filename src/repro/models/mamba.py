@@ -1,0 +1,195 @@
+"""Attention-free SSM family (falcon-mamba-7b, Mamba-1 architecture).
+
+Per layer: in_proj → (x, z); x → causal depthwise conv(4) → SiLU → selective
+SSM → ⊙ SiLU(z) → out_proj. The selective scan is computed CHUNKED: the
+sequence is split into fixed chunks; within a chunk `lax.associative_scan`
+produces both the prefix states and the chunk's transition product, and the
+inter-chunk state is carried by a sequential `lax.scan` — this bounds the
+materialized [B, chunk, d_inner, N] tensors (the TPU adaptation of the
+CUDA selective-scan kernel's registers/SRAM blocking; see DESIGN.md §8).
+
+Channels are independent ⇒ activations shard over `model` on d_inner
+without any cross-device sequential dependency (sharding/context.py).
+Decode is the O(1) recurrence on a [B, d_inner, N] state — why this arch
+runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as nn
+from repro.models import transformer as tf
+from repro.sharding.context import constrain
+from repro.sharding.rules import ParamDef
+
+CHUNK = 256
+# channel sharding: "mlp" is the LOGICAL axis name that maps to the `model`
+# mesh axis in the rule table (a raw mesh-axis name here silently resolves
+# to replicated — cost 96 GiB/device before this was caught)
+RESIDUAL_AXES = ("batch", None, "mlp")
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    dt = cfg.param_dtype
+    L, D, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    Di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual
+    blocks = {
+        "norm": tf._norm_defs((L, D), cfg, dt),
+        "in_proj": ParamDef((L, D, 2 * Di), ("layers", "embed", "mlp"), dtype=dt),
+        "conv_w": ParamDef((L, 4, Di), ("layers", "conv", "mlp"), "scaled", scale=0.2, dtype=dt),
+        "conv_b": ParamDef((L, Di), ("layers", "mlp"), "zeros", dtype=dt),
+        "x_proj": ParamDef((L, Di, R + 2 * N), ("layers", "mlp", None), dtype=dt),
+        "dt_proj": ParamDef((L, R, Di), ("layers", None, "mlp"), "scaled", scale=0.1, dtype=dt),
+        "dt_bias": ParamDef((L, Di), ("layers", "mlp"), "ones", dtype=dt),
+        "A_log": ParamDef((L, Di, N), ("layers", "mlp", "state"), "ones", dtype=dt),
+        "D_skip": ParamDef((L, Di), ("layers", "mlp"), "ones", dtype=dt),
+        "out_proj": ParamDef((L, Di, D), ("layers", "mlp", "embed"), dtype=dt),
+    }
+    p = {
+        "tok_embed": ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt),
+        "blocks": blocks,
+        "final_norm": tf._norm_defs((D,), cfg, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Selective scan
+# ---------------------------------------------------------------------------
+
+def _ssm_params(x, lp, cfg):
+    """x [B,S,Di] (post-conv) -> (dA [B,S,Di,N], dBx [B,S,Di,N], C [B,S,N])."""
+    N, R = cfg.ssm_state, cfg.dt_rank_actual
+    proj = jnp.einsum("bsd,dr->bsr", x, lp["x_proj"])
+    dtr, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dtr, lp["dt_proj"]) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))              # [Di,N]
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)        # [B,S,Di,N]
+    dBx = (dt * x).astype(jnp.float32)[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+    return dA, dBx, Cc
+
+
+def selective_scan(x, lp, cfg, h0=None):
+    """Chunked selective scan. x [B,S,Di] -> (y [B,S,Di], h_last [B,Di,N]).
+
+    The SSM parameters (dA, dBx, C) are computed PER CHUNK inside the scan
+    body (and the body is rematerialized): materializing [B,S,Di,N] f32 for
+    the full sequence costs 34 GiB/device on falcon-mamba train_4k.
+    Channels shard over `model` (constrained here), so the per-chunk
+    tensors are [B, chunk, Di/16, N]."""
+    B, S, Di = x.shape
+    N = cfg.ssm_state
+    chunk = min(CHUNK, S)
+    while S % chunk != 0:
+        chunk //= 2
+    nch = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_body(h_prev, x_c):
+        x_c = constrain(x_c, ("batch", None, "mlp"))
+        dA_c, dBx_c, C_c = _ssm_params(x_c, lp, cfg)
+        P, Ss = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+        hs = Ss + P * h_prev[:, None, :, :]        # states at every position
+        y = jnp.einsum("bsdn,bsn->bsd", hs, C_c.astype(jnp.float32))
+        return hs[:, -1, :, :], y.astype(x_c.dtype)
+
+    if nch > 1:
+        chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    xs = x.reshape(B, nch, chunk, Di).transpose(1, 0, 2, 3)
+    h_last, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, Di)
+    return y.astype(x.dtype), h_last
+
+
+def _mamba_block(cfg, lp, h, conv_state=None, ssm_state=None):
+    x = nn.apply_norm(cfg, h, lp["norm"])
+    xz = jnp.einsum("bsd,de->bse", x, lp["in_proj"])
+    xb, z = jnp.split(xz, 2, axis=-1)
+    from repro.models.rglru import _causal_conv
+    xb, new_conv = _causal_conv(xb, lp["conv_w"], lp["conv_b"], conv_state)
+    xb = jax.nn.silu(xb)
+    y, h_last = selective_scan(xb, lp, cfg, h0=ssm_state)
+    y = y + lp["D_skip"] * xb
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, lp["out_proj"])
+    return h + out, (new_conv, h_last)
+
+
+def hidden_states(cfg: ModelConfig, params, tokens, collect_state=False):
+    h = tf.embed_tokens(cfg, params, tokens)
+
+    def body(carry, lp):
+        carry = constrain(carry, RESIDUAL_AXES)
+        out, st = _mamba_block(cfg, lp, carry)
+        # constrain the OUTPUT too: the scan saves/stacks body outputs, and
+        # an unconstrained stack accumulates replicated on D (+96 GiB/device
+        # observed on falcon-mamba train_4k)
+        return constrain(out, RESIDUAL_AXES), st
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, states = jax.lax.scan(body, h, params["blocks"])
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    if collect_state:
+        return h, states
+    return h
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    h = hidden_states(cfg, params, batch["tokens"])
+    return nn.lm_loss(h, tf.unembed(cfg, params), batch["targets"],
+                      batch["mask"])
+
+
+# ---------------------------------------------------------------------------
+# Serving — O(1) state decode
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    L, Di, N = cfg.num_layers, cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": ParamDef((L, batch, 3, Di), ("layers", "batch", None, "mlp"), "zeros", dtype=cfg.dtype),
+        "ssm": ParamDef((L, batch, Di, N), ("layers", "batch", "mlp", "state"), "zeros", dtype="float32"),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int):
+    h, (convs, ssms) = hidden_states(cfg, params, tokens, collect_state=True)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1, :], tf.unembed(cfg, params))
+    return logits.astype(jnp.float32), {
+        "conv": convs.astype(jnp.dtype(cfg.dtype)),
+        "ssm": ssms.astype(jnp.float32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache: Dict, tokens, pos_scalar):
+    del pos_scalar   # SSM decode is position-free
+    h = tf.embed_tokens(cfg, params, tokens[:, None])
+
+    def body(carry, xs):
+        lp, cs, ss = xs
+        out, (nc, nh) = _mamba_block(cfg, lp, carry, conv_state=cs,
+                                     ssm_state=ss)
+        return out, (nc, nh)
+
+    h, (ncs, nss) = jax.lax.scan(
+        body, h, (params["blocks"], cache["conv"], cache["ssm"]))
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, 0, :], tf.unembed(cfg, params))
+    return logits.astype(jnp.float32), {
+        "conv": ncs.astype(cache["conv"].dtype),
+        "ssm": nss.astype(jnp.float32),
+    }

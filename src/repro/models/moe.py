@@ -1,0 +1,290 @@
+"""Mixture-of-Experts family (qwen3-moe-235b-a22b, deepseek-moe-16b).
+
+Token-choice top-k routing with GShard-style capacity dispatch: static
+shapes, einsum dispatch/combine (TPU-native — no dynamic gather/scatter),
+experts sharded over the `model` mesh axis (expert parallelism). Shared
+experts (deepseek) run densely on every token. `first_dense_layers` keeps the
+leading layer(s) dense (deepseek's fine-grained design); the dense layer's
+hidden size defaults to moe_d_ff·(top_k + shared) to match activated compute.
+
+Routing priority is (rank, position): rank-r assignments claim capacity
+before rank-r+1, tokens in group order — the standard GShard tie-break.
+Dropped tokens (over capacity) fall through with zero expert contribution
+(the residual path carries them), matching dropping-MoE semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import layers as nn
+from repro.models import transformer as tf
+from repro.sharding.context import constrain
+from repro.sharding.rules import ParamDef
+
+CAPACITY_FACTOR = 1.25
+GROUP_SIZE = 256          # tokens per routing group (seq blocks; see moe_ffn)
+
+
+def _moe_mlp_defs(cfg: ModelConfig, L: int, dtype: str) -> Dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "router": ParamDef((L, D, E), ("layers", "embed_no_fsdp", "expert"), dtype=dtype),
+        "w_gate": ParamDef((L, E, D, F), ("layers", "expert", "embed", "expert_mlp"), dtype=dtype),
+        "w_up": ParamDef((L, E, D, F), ("layers", "expert", "embed", "expert_mlp"), dtype=dtype),
+        "w_down": ParamDef((L, E, F, D), ("layers", "expert", "expert_mlp", "embed"), dtype=dtype),
+    }
+    if cfg.num_shared_experts > 0:
+        Fs = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": ParamDef((L, D, Fs), ("layers", "embed", "mlp"), dtype=dtype),
+            "w_up": ParamDef((L, D, Fs), ("layers", "embed", "mlp"), dtype=dtype),
+            "w_down": ParamDef((L, Fs, D), ("layers", "mlp", "embed"), dtype=dtype),
+        }
+    return p
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    dt = cfg.param_dtype
+    D, V = cfg.d_model, cfg.vocab_size
+    n0 = cfg.first_dense_layers
+    Lm = cfg.num_layers - n0
+    p = {
+        "tok_embed": ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt),
+        "moe_blocks": {
+            **{k: v for k, v in tf.block_param_defs(cfg, Lm, dt).items() if k != "mlp"},
+            "moe": _moe_mlp_defs(cfg, Lm, dt),
+        },
+        "final_norm": tf._norm_defs((D,), cfg, dt),
+    }
+    if n0 > 0:
+        dense_ff = cfg.d_ff if cfg.d_ff > 0 else cfg.moe_d_ff * (
+            cfg.experts_per_token + cfg.num_shared_experts)
+        dense_cfg = cfg.with_overrides(d_ff=dense_ff)
+        p["dense_blocks"] = tf.block_param_defs(dense_cfg, n0, dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing + expert computation
+# ---------------------------------------------------------------------------
+
+def moe_ffn(x, p: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B,S,D] -> (y [B,S,D], aux_loss scalar).
+
+    Routing groups are SEQ BLOCKS of Sg=256 tokens kept as a separate dim
+    [B, n, Sg, ...] (never flattened across batch x seq): the n dim aligns
+    with the 16-way sequence sharding so every routing group is device-local,
+    and the small per-group capacity keeps the dispatch one-hots at
+    tokens*E*C ≈ 5 GiB global (vs 43 GiB with 2048-token groups). Expert
+    tensors are constrained to (expert→model, batch→data)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    Sg = min(GROUP_SIZE, S)
+    while S % Sg != 0:
+        Sg //= 2
+    n = S // Sg
+    C = max(1, int(np.ceil(Sg * k * CAPACITY_FACTOR / E)))
+
+    xg = x.reshape(B, n, Sg, D)
+    logits = jnp.einsum("bnsd,de->bnse", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    counts = jnp.zeros((B, n, 1, E), jnp.float32)
+    dispatch = jnp.zeros((B, n, Sg, E, C), x.dtype)
+    combine = jnp.zeros((B, n, Sg, E, C), x.dtype)
+    for r in range(k):
+        m = jax.nn.one_hot(topi[..., r], E, dtype=jnp.float32)    # [B,n,Sg,E]
+        pos = jnp.cumsum(m, axis=2) - m + counts                  # queue position
+        pos_tok = jnp.sum(pos * m, axis=-1)                       # [B,n,Sg]
+        within = (pos_tok < C).astype(jnp.float32)
+        m_kept = m * within[..., None]
+        counts = counts + jnp.sum(m_kept, axis=2, keepdims=True)
+        slot = jax.nn.one_hot(pos_tok.astype(jnp.int32), C, dtype=jnp.float32)
+        slot = slot * within[..., None]                           # [B,n,Sg,C]
+        contrib = (m_kept[..., :, None] * slot[..., None, :]).astype(x.dtype)
+        dispatch = dispatch + contrib
+        combine = combine + contrib * topv[..., r][..., None, None].astype(x.dtype)
+
+    moe_tok_axes = ("batch", "seq_shard", None, None, None)
+    expert_axes = ("expert", "batch", None, None, None)
+    dispatch = constrain(dispatch, moe_tok_axes)
+    combine = constrain(combine, moe_tok_axes)
+    xin = jnp.einsum("bnsec,bnsd->ebncd", dispatch, xg)           # [E,B,n,C,D]
+    xin = constrain(xin, expert_axes)
+    hg = nn._act(cfg.activation,
+                 jnp.einsum("ebncd,edf->ebncf", xin, p["w_gate"]))
+    hu = jnp.einsum("ebncd,edf->ebncf", xin, p["w_up"])
+    out_e = jnp.einsum("ebncf,efd->ebncd", hg * hu, p["w_down"])
+    out_e = constrain(out_e, expert_axes)
+    y = jnp.einsum("bnsec,ebncd->bnsd", combine, out_e).reshape(B, S, D)
+
+    if cfg.num_shared_experts > 0:
+        sp = p["shared"]
+        gate = nn._act(cfg.activation, jnp.einsum("bsd,df->bsf", x, sp["w_gate"]))
+        up = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        y = y + jnp.einsum("bsf,fd->bsd", gate * up, sp["w_down"])
+
+    # load-balancing aux (Switch/GShard): E * Σ_e f_e · p̄_e
+    sel_frac = jnp.mean(jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32),
+                        axis=(0, 1, 2))
+    mean_prob = jnp.mean(probs, axis=(0, 1, 2))
+    aux = E * jnp.sum(sel_frac * mean_prob)
+    return y, aux
+
+
+def _moe_block(cfg: ModelConfig, lp: Dict, h, pos, window,
+               kv_override=None, pos_k=None):
+    x = nn.apply_norm(cfg, h, lp["attn_norm"])
+    q, kk, vv = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+    q, kk = tf._qk_normalize(cfg, lp["attn"], q, kk)
+    q = nn.apply_rope(q, pos, cfg)
+    kk = nn.apply_rope(kk, pos, cfg)
+    k_new, v_new = kk, vv
+    if kv_override is not None:
+        kk, vv = kv_override
+        pk = pos_k
+    else:
+        pk = pos
+    out = nn.attention(q, kk, vv, pos, pk, causal=True, window=window,
+                       chunk_q=2048)
+    h = h + nn.attn_output(out, lp["attn"], cfg.use_bias)
+    x = nn.apply_norm(cfg, h, lp["mlp_norm"])
+    y, aux = moe_ffn(x, lp["moe"], cfg)
+    return h + y, aux, (k_new, v_new)
+
+
+def hidden_states(cfg: ModelConfig, params, tokens, positions=None,
+                  collect_cache: bool = False):
+    B, S = tokens.shape
+    pos = positions if positions is not None else jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = embed = tf.embed_tokens(cfg, params, tokens)
+    n0 = cfg.first_dense_layers
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+
+    if n0 > 0:
+        dense_ff = cfg.d_ff if cfg.d_ff > 0 else cfg.moe_d_ff * (
+            cfg.experts_per_token + cfg.num_shared_experts)
+        dense_cfg = cfg.with_overrides(d_ff=dense_ff)
+        for i in range(n0):
+            lp = jax.tree.map(lambda x: x[i], params["dense_blocks"])
+            h, kv = tf.block_apply(dense_cfg, lp, h, pos, 0)
+            caches.append(kv)
+
+    def body(carry, lp):
+        hh, aux = carry
+        hh = tf.constrain(hh, tf.RESIDUAL_AXES)
+        hh, a, kv = _moe_block(cfg, lp, hh, pos, 0)
+        return (tf.constrain(hh, tf.RESIDUAL_AXES), aux + a), kv
+
+    step = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "full" else body
+    (h, aux_total), kvs = jax.lax.scan(step, (h, aux_total), params["moe_blocks"])
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    if collect_cache:
+        return h, aux_total, (caches, kvs)
+    return h, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    h, aux = hidden_states(cfg, params, batch["tokens"])
+    ce = nn.lm_loss(h, tf.unembed(cfg, params), batch["targets"], batch["mask"],
+                    softcap=cfg.logits_softcap)
+    return ce + cfg.router_aux_loss * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+cache_defs = tf.cache_defs     # same layout: [L, B, K, S, h]
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int):
+    B, S = tokens.shape
+    h, _, (dense_kvs, moe_kvs) = hidden_states(cfg, params, tokens,
+                                               collect_cache=True)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1, :], tf.unembed(cfg, params))
+
+    def stack_cache(dense_list, scanned):
+        if dense_list:
+            d = jnp.stack([kv for kv in dense_list])     # [n0,B,S,K,h]
+            return jnp.concatenate([d, scanned], axis=0)
+        return scanned
+
+    ks = stack_cache([kv[0] for kv in dense_kvs], moe_kvs[0])
+    vs = stack_cache([kv[1] for kv in dense_kvs], moe_kvs[1])
+
+    def pad_cache(x):  # [L,B,S,K,h] -> [L,B,K,cache_len,h]
+        x = x.transpose(0, 1, 3, 2, 4)
+        pad = cache_len - x.shape[3]
+        return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.dtype(cfg.dtype))
+
+    return logits.astype(jnp.float32), {"k": pad_cache(ks), "v": pad_cache(vs)}
+
+
+def decode_step(cfg: ModelConfig, params, cache: Dict, tokens, pos_scalar):
+    """Carry-DUS cache update (in-place with donation; see transformer.py)."""
+    B = tokens.shape[0]
+    S = cache["k"].shape[3]
+    n0 = cfg.first_dense_layers
+    Lm = cfg.num_layers - n0
+    tok = tokens[:, None]
+    pos_q = jnp.broadcast_to(pos_scalar[None, None], (B, 1)).astype(jnp.int32)
+    pos_k = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = tf.embed_tokens(cfg, params, tok)
+    ck_all, cv_all = cache["k"], cache["v"]
+
+    def attend(lp, hh, ck, cv):
+        x = nn.apply_norm(cfg, hh, lp["attn_norm"])
+        q, k, v = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+        q, k = tf._qk_normalize(cfg, lp["attn"], q, k)
+        q = nn.apply_rope(q, pos_q, cfg)
+        k = nn.apply_rope(k, pos_q, cfg)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.transpose(0, 2, 1, 3).astype(ck.dtype), pos_scalar, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.transpose(0, 2, 1, 3).astype(cv.dtype), pos_scalar, axis=2)
+        out = nn.attention(q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                           pos_q, pos_k, causal=True, window=0)
+        return hh + nn.attn_output(out, lp["attn"], cfg.use_bias), ck, cv
+
+    if n0 > 0:
+        dense_ff = cfg.d_ff if cfg.d_ff > 0 else cfg.moe_d_ff * (
+            cfg.experts_per_token + cfg.num_shared_experts)
+        dense_cfg = cfg.with_overrides(d_ff=dense_ff)
+        for i in range(n0):
+            lp = jax.tree.map(lambda x: x[i], params["dense_blocks"])
+            h, ck, cv = attend(lp, h, ck_all[i], cv_all[i])
+            x = nn.apply_norm(cfg, h, lp["mlp_norm"])
+            h = h + nn.mlp(x, lp["mlp"], dense_cfg)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+
+    def body(carry, xs):
+        hh, ck_all, cv_all = carry
+        lp, i = xs
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        hh, ck, cv = attend(lp, hh, ck, cv)
+        x = nn.apply_norm(cfg, hh, lp["mlp_norm"])
+        y, _ = moe_ffn(x, lp["moe"], cfg)
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+        return (hh + y, ck_all, cv_all), None
+
+    (h, ck_all, cv_all), _ = jax.lax.scan(
+        body, (h, ck_all, cv_all),
+        (params["moe_blocks"], n0 + jnp.arange(Lm)))
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, 0, :], tf.unembed(cfg, params))
+    return logits.astype(jnp.float32), {"k": ck_all, "v": cv_all}

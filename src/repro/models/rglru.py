@@ -1,0 +1,345 @@
+"""Hybrid recurrent family (recurrentgemma-2b / Griffin).
+
+26 layers in the repeating pattern (recurrent, recurrent, local-attention):
+8 full groups + 2 trailing recurrent layers. The recurrent block is the
+RG-LRU: causal conv(4) → gated linear recurrence
+    a_t = exp(−c·softplus(Λ)·r_t),  h_t = a_t⊙h_{t−1} + √(1−a_t²)⊙(i_t⊙x_t)
+computed with `lax.associative_scan` over the sequence (channels are
+independent → the scan is elementwise, so channel-sharding over the `model`
+axis never crosses devices; see sharding/context.py).
+
+Attention layers are MQA (kv=1) with a 2048 local window; decode uses a
+RING-BUFFER cache of exactly `local_window` slots — constant memory in
+sequence length, which is why this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as nn
+from repro.models import transformer as tf
+from repro.sharding.context import constrain
+from repro.sharding.rules import ParamDef
+
+RG_C = 8.0
+# channel sharding over the `model` mesh axis via the "mlp" LOGICAL rule
+RESIDUAL_AXES = ("batch", None, "mlp")
+
+
+def _pattern(cfg: ModelConfig):
+    """Returns (num_groups, num_tail_rec). Pattern = (rec, rec, attn)*G + rec*T."""
+    L = cfg.num_layers
+    G = L // 3
+    tail = L - 3 * G
+    return G, tail
+
+
+def _rec_defs(cfg: ModelConfig, L: int, dt: str) -> Dict:
+    D, W = cfg.d_model, cfg.lru_width
+    nb = max(1, cfg.num_heads)                  # block-diagonal gate blocks
+    bs = W // nb
+    return {
+        "norm": tf._norm_defs((L, D), cfg, dt),
+        "w_x": ParamDef((L, D, W), ("layers", "embed", "mlp"), dtype=dt),
+        "w_y": ParamDef((L, D, W), ("layers", "embed", "mlp"), dtype=dt),
+        "w_out": ParamDef((L, W, D), ("layers", "mlp", "embed"), dtype=dt),
+        "conv_w": ParamDef((L, 4, W), ("layers", "conv", "mlp"), "scaled", scale=0.2, dtype=dt),
+        "conv_b": ParamDef((L, W), ("layers", "mlp"), "zeros", dtype=dt),
+        "gate_r_w": ParamDef((L, nb, bs, bs), ("layers", None, "mlp", None), dtype=dt),
+        "gate_r_b": ParamDef((L, W), ("layers", "mlp"), "zeros", dtype=dt),
+        "gate_i_w": ParamDef((L, nb, bs, bs), ("layers", None, "mlp", None), dtype=dt),
+        "gate_i_b": ParamDef((L, W), ("layers", "mlp"), "zeros", dtype=dt),
+        "lam": ParamDef((L, W), ("layers", "mlp"), "ones", dtype=dt),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, L: int, dt: str) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "norm": tf._norm_defs((L, D), cfg, dt),
+        "w_gate": ParamDef((L, D, F), ("layers", "embed", "mlp"), dtype=dt),
+        "w_up": ParamDef((L, D, F), ("layers", "embed", "mlp"), dtype=dt),
+        "w_down": ParamDef((L, F, D), ("layers", "mlp", "embed"), dtype=dt),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    dt = cfg.param_dtype
+    D, V = cfg.d_model, cfg.vocab_size
+    G, T = _pattern(cfg)
+    attn_stack = {k: v for k, v in tf.block_param_defs(cfg, G, dt).items()}
+    p = {
+        "tok_embed": ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt),
+        "rec1": {**_rec_defs(cfg, G, dt), "mlp": _mlp_defs(cfg, G, dt)},
+        "rec2": {**_rec_defs(cfg, G, dt), "mlp": _mlp_defs(cfg, G, dt)},
+        "attn": attn_stack,
+        "final_norm": tf._norm_defs((D,), cfg, dt),
+    }
+    if T > 0:
+        p["tail"] = {**_rec_defs(cfg, T, dt), "mlp": _mlp_defs(cfg, T, dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block
+# ---------------------------------------------------------------------------
+
+def _block_diag(x, w):
+    """x [B,S,W], w [nb,bs,bs] block-diagonal matmul."""
+    B, S, W = x.shape
+    nb = w.shape[0]
+    xb = x.reshape(B, S, nb, W // nb)
+    return jnp.einsum("bsnk,nkj->bsnj", xb, w).reshape(B, S, W)
+
+
+def _causal_conv(x, conv_w, conv_b, state=None):
+    """Depthwise causal conv, width 4. x [B,S,W], conv_w [4,W].
+    state [B,3,W] carries the previous 3 inputs (decode)."""
+    if state is None:
+        pad = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # [B, S+3, W]
+    S = x.shape[1]
+    out = sum(xp[:, j:j + S, :] * conv_w[3 - j] for j in range(4))
+    return out + conv_b, xp[:, -3:, :]
+
+
+CHUNK = 512
+
+
+def _rg_lru_block(x, gates_r, gates_i, lam, h0):
+    """One chunk: x [B,C,W] f32 scan; returns (y, h_last) in f32."""
+    r = jax.nn.sigmoid(gates_r.astype(jnp.float32))
+    i = jax.nn.sigmoid(gates_i.astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x.astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    As, Bs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    Bs = Bs + As * h0[:, None, :]
+    return Bs, Bs[:, -1, :]
+
+
+def rg_lru(x, gates_r, gates_i, lam, h0=None):
+    """x [B,S,W] -> (y [B,S,W], h_last [B,W]).
+
+    Chunked associative scan (cf. mamba.selective_scan): the full-sequence
+    f32 scan tree cost ~50 GiB/device on recurrentgemma train_4k; per-chunk
+    scan + sequential chunk carry bounds it to [B, CHUNK, W/16] tensors.
+    Channels are independent -> W shards over `model` with no cross-device
+    sequential dependency."""
+    B, S, W = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    else:
+        h0 = h0.astype(jnp.float32)
+    chunk = min(CHUNK, S)
+    while S % chunk != 0:
+        chunk //= 2
+    nch = S // chunk
+    if nch == 1:
+        y, h_last = _rg_lru_block(x, gates_r, gates_i, lam, h0)
+        return y.astype(x.dtype), h_last
+
+    def chunk_body(h_prev, inp):
+        x_c, gr_c, gi_c = inp
+        x_c = constrain(x_c, ("batch", None, "mlp"))
+        y, h_last = _rg_lru_block(x_c, gr_c, gi_c, lam, h_prev)
+        return h_last, y.astype(x.dtype)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    rs = lambda t: t.reshape(B, nch, chunk, W).transpose(1, 0, 2, 3)
+    h_last, ys = jax.lax.scan(chunk_body, h0,
+                              (rs(x), rs(gates_r), rs(gates_i)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, W)
+    return y.astype(x.dtype), h_last
+
+
+def _rec_block(cfg, lp, h, conv_state=None, h0=None):
+    """Returns (h_out, (new_conv_state, new_h_state))."""
+    x = nn.apply_norm(cfg, h, lp["norm"])
+    xb = constrain(jnp.einsum("bsd,dw->bsw", x, lp["w_x"]),
+                   ("batch", None, "mlp"))
+    yb = jax.nn.gelu(constrain(jnp.einsum("bsd,dw->bsw", x, lp["w_y"]),
+                               ("batch", None, "mlp")))
+    xb, new_conv = _causal_conv(xb, lp["conv_w"], lp["conv_b"], conv_state)
+    gr = _block_diag(xb, lp["gate_r_w"]) + lp["gate_r_b"]
+    gi = _block_diag(xb, lp["gate_i_w"]) + lp["gate_i_b"]
+    rec, h_last = rg_lru(xb, gr, gi, lp["lam"], h0)
+    out = jnp.einsum("bsw,wd->bsd", rec * yb, lp["w_out"])
+    h = h + out
+    x = nn.apply_norm(cfg, h, lp["mlp"]["norm"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, lp["mlp"]["w_gate"]))
+    up = jnp.einsum("bsd,df->bsf", x, lp["mlp"]["w_up"])
+    h = h + jnp.einsum("bsf,fd->bsd", gate * up, lp["mlp"]["w_down"])
+    return h, (new_conv, h_last)
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+
+def hidden_states(cfg: ModelConfig, params, tokens, collect_state=False):
+    B, S = tokens.shape
+    G, T = _pattern(cfg)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = tf.embed_tokens(cfg, params, tokens)
+
+    def body(carry, xs):
+        r1, r2, ap = xs
+        carry = constrain(carry, RESIDUAL_AXES)
+        carry, s1 = _rec_block(cfg, r1, carry)
+        carry, s2 = _rec_block(cfg, r2, carry)
+        carry, kv = tf.block_apply(cfg, ap, carry, pos, cfg.local_window)
+        return constrain(carry, RESIDUAL_AXES), (s1, s2, kv)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, states = jax.lax.scan(
+        body, h, (params["rec1"], params["rec2"], params["attn"]))
+
+    tail_states = []
+    for t in range(T):
+        lp = jax.tree.map(lambda x: x[t], params["tail"])
+        h, st = _rec_block(cfg, lp, h)
+        tail_states.append(st)
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    if collect_state:
+        return h, states, tail_states
+    return h
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    h = hidden_states(cfg, params, batch["tokens"])
+    return nn.lm_loss(h, tf.unembed(cfg, params), batch["targets"],
+                      batch["mask"], softcap=cfg.logits_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Serving — ring-buffer attention cache + recurrent states
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    G, T = _pattern(cfg)
+    W = cfg.lru_width
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    win = min(cfg.local_window, seq_len)
+    return {
+        "conv": ParamDef((2 * G + T, batch, 3, W), ("layers", "batch", None, "mlp"), "zeros", dtype=cfg.dtype),
+        "rg_h": ParamDef((2 * G + T, batch, W), ("layers", "batch", "mlp"), "zeros", dtype="float32"),
+        "k": ParamDef((G, batch, K, win, hd), ("layers", "batch", "cache_kv", "seq", "head_dim"), "zeros", dtype=cfg.dtype),
+        "v": ParamDef((G, batch, K, win, hd), ("layers", "batch", "cache_kv", "seq", "head_dim"), "zeros", dtype=cfg.dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int):
+    B, S = tokens.shape
+    G, T = _pattern(cfg)
+    win = min(cfg.local_window, cache_len)
+    h, states, tail_states = hidden_states(cfg, params, tokens,
+                                           collect_state=True)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1, :], tf.unembed(cfg, params))
+
+    (conv1, rg1), (conv2, rg2), (ks, vs) = states
+
+    # interleave rec1/rec2 per group then append tail
+    conv_cache = jnp.concatenate(
+        [jnp.stack([conv1, conv2], axis=1).reshape((-1,) + conv1.shape[1:])]
+        + [st[0][None] for st in tail_states], axis=0)
+    rg_cache = jnp.concatenate(
+        [jnp.stack([rg1, rg2], axis=1).reshape((-1,) + rg1.shape[1:])]
+        + [st[1][None].astype(jnp.float32) for st in tail_states], axis=0)
+
+    # ring cache: slot j holds the newest position p ≡ j (mod win); compute
+    # the slot->position map explicitly (a plain tail slice is only correct
+    # when S % win == 0)
+    j = jnp.arange(win)
+    p_j = (S - 1) - jnp.mod(S - 1 - j, win)          # may be < 0 when S < win
+    idx = jnp.maximum(p_j, 0)
+
+    def ring(x):  # [G,B,S,K,h] -> [G,B,K,win,h]
+        picked = jnp.take(x, idx, axis=2)
+        picked = jnp.where((p_j >= 0)[None, None, :, None, None], picked, 0.0)
+        return picked.transpose(0, 1, 3, 2, 4).astype(jnp.dtype(cfg.dtype))
+
+    return logits.astype(jnp.float32), {
+        "conv": conv_cache.astype(jnp.dtype(cfg.dtype)),
+        "rg_h": rg_cache.astype(jnp.float32),
+        "k": ring(ks), "v": ring(vs),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache: Dict, tokens, pos_scalar):
+    B = tokens.shape[0]
+    G, T = _pattern(cfg)
+    win = cache["k"].shape[3]
+    pos_q = jnp.broadcast_to(pos_scalar[None, None], (B, 1)).astype(jnp.int32)
+    slot = jnp.mod(pos_scalar, win)
+    # ring-slot positions: p_j = pos - ((pos - j) mod win); p_j < 0 ⇒ empty
+    j = jnp.arange(win, dtype=jnp.int32)
+    pos_k = pos_scalar - jnp.mod(pos_scalar - j, win)
+    pos_k = jnp.broadcast_to(pos_k[None, :], (B, win))
+    h = tf.embed_tokens(cfg, params, tokens[:, None])
+
+    conv_g = cache["conv"][:2 * G].reshape((G, 2) + cache["conv"].shape[1:])
+    rg_g = cache["rg_h"][:2 * G].reshape((G, 2) + cache["rg_h"].shape[1:])
+
+    def rec_step(lp, hh, conv_st, rg_st):
+        hh, (nc, nh) = _rec_block(cfg, lp, hh, conv_state=conv_st, h0=rg_st)
+        return hh, nc, nh
+
+    def body(carry, xs):
+        r1, r2, ap, cs, rs, ck, cv = xs
+        carry, nc1, nh1 = rec_step(r1, carry, cs[0], rs[0])
+        carry, nc2, nh2 = rec_step(r2, carry, cs[1], rs[1])
+        # local attention against the ring buffer
+        x = nn.apply_norm(cfg, carry, ap["attn_norm"])
+        q, k, v = nn.gqa_project(x, ap["attn"], cfg, cfg.use_qkv_bias)
+        q = nn.apply_rope(q, pos_q, cfg)
+        k = nn.apply_rope(k, pos_q, cfg)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.transpose(0, 2, 1, 3).astype(ck.dtype), slot, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.transpose(0, 2, 1, 3).astype(cv.dtype), slot, axis=2)
+        valid_pos = jnp.where(pos_k >= 0, pos_k, jnp.int32(1 << 30))
+        out = nn.attention(q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                           pos_q, valid_pos, causal=True,
+                           window=cfg.local_window)
+        carry = carry + nn.attn_output(out, ap["attn"], cfg.use_bias)
+        x = nn.apply_norm(cfg, carry, ap["mlp_norm"])
+        carry = carry + nn.mlp(x, ap["mlp"], cfg)
+        return carry, (jnp.stack([nc1, nc2]), jnp.stack([nh1, nh2]), ck, cv)
+
+    h, (ncs, nrs, nk, nv) = jax.lax.scan(
+        body, h, (params["rec1"], params["rec2"], params["attn"],
+                  conv_g, rg_g, cache["k"], cache["v"]))
+
+    new_conv = ncs.reshape((-1,) + ncs.shape[2:])
+    new_rg = nrs.reshape((-1,) + nrs.shape[2:])
+    for t in range(T):
+        lp = jax.tree.map(lambda x: x[t], params["tail"])
+        h, nct, nht = rec_step(lp, h, cache["conv"][2 * G + t],
+                               cache["rg_h"][2 * G + t])
+        new_conv = jnp.concatenate([new_conv, nct[None]], axis=0)
+        new_rg = jnp.concatenate([new_rg, nht[None]], axis=0)
+
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, 0, :], tf.unembed(cfg, params))
+    return logits.astype(jnp.float32), {
+        "conv": new_conv.astype(cache["conv"].dtype),
+        "rg_h": new_rg.astype(jnp.float32),
+        "k": nk, "v": nv,
+    }

@@ -1,0 +1,300 @@
+"""Dense decoder-only transformer (GQA + RoPE), scan-over-layers + remat.
+
+Covers chatglm3-6b, stablelm-12b, gemma3-4b (5:1 local:global), and
+command-r-plus-104b via ModelConfig knobs; reused as the backbone by the MoE
+and VLM families. Three entry points per the shape grid:
+
+  * ``loss_fn``      — train_4k (full fwd + chunked xent)
+  * ``prefill``      — prefill_32k (returns last-position logits + KV cache)
+  * ``decode_step``  — decode_32k / long_500k (one token, cache update)
+
+KV caches are laid out [L, B, K, S, h] with the sequence dim tagged
+``seq_shard`` (→ `model` mesh axis): flash-decode-style sharding, chosen
+because GQA kv-head counts (1–20) do not divide a 16-way TP axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import layers as nn
+from repro.sharding.context import constrain, constrain_tree
+from repro.sharding.rules import ParamDef, layer_axes_strs
+
+# residual-stream constraint for attention families: sequence parallelism
+RESIDUAL_AXES = ("batch", "seq_shard", None)
+
+
+def block_axes(cfg: ModelConfig) -> dict:
+    """Axis-string tree for one layer's params (constrain_tree input)."""
+    return layer_axes_strs(block_param_defs(cfg, 1, cfg.param_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Param defs
+# ---------------------------------------------------------------------------
+
+def _norm_defs(shape, cfg: ModelConfig, dtype):
+    axes = ("layers", None) if len(shape) == 2 else (None,)
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef(shape, axes, "ones", dtype=dtype),
+            "bias": ParamDef(shape, axes, "zeros", dtype=dtype),
+        }
+    # rmsnorm uses (1 + scale), so zeros == identity
+    return {"scale": ParamDef(shape, axes, "zeros", dtype=dtype)}
+
+
+def block_param_defs(cfg: ModelConfig, num_layers: int, dtype: str) -> Dict:
+    """Stacked per-layer params for one homogeneous attention+MLP stack."""
+    L, D = num_layers, cfg.d_model
+    N, K, h, F = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_ff
+    p = {
+        "attn_norm": _norm_defs((L, D), cfg, dtype),
+        "mlp_norm": _norm_defs((L, D), cfg, dtype),
+        "attn": {
+            "wq": ParamDef((L, D, N, h), ("layers", "embed", "heads", "head_dim"), dtype=dtype),
+            "wk": ParamDef((L, D, K, h), ("layers", "embed", "kv_heads", "head_dim"), dtype=dtype),
+            "wv": ParamDef((L, D, K, h), ("layers", "embed", "kv_heads", "head_dim"), dtype=dtype),
+            "wo": ParamDef((L, N, h, D), ("layers", "heads", "head_dim", "embed"), dtype=dtype),
+        },
+        "mlp": {
+            "w_up": ParamDef((L, D, F), ("layers", "embed", "mlp"), dtype=dtype),
+            "w_down": ParamDef((L, F, D), ("layers", "mlp", "embed"), dtype=dtype),
+        },
+    }
+    if cfg.glu:
+        p["mlp"]["w_gate"] = ParamDef((L, D, F), ("layers", "embed", "mlp"), dtype=dtype)
+    if cfg.use_qkv_bias:
+        p["attn"]["bq"] = ParamDef((L, N, h), ("layers", "heads", "head_dim"), "zeros", dtype=dtype)
+        p["attn"]["bk"] = ParamDef((L, K, h), ("layers", "kv_heads", "head_dim"), "zeros", dtype=dtype)
+        p["attn"]["bv"] = ParamDef((L, K, h), ("layers", "kv_heads", "head_dim"), "zeros", dtype=dtype)
+    if cfg.use_bias:
+        p["attn"]["bo"] = ParamDef((L, D), ("layers", "embed"), "zeros", dtype=dtype)
+        p["mlp"]["b_up"] = ParamDef((L, F), ("layers", "mlp"), "zeros", dtype=dtype)
+        p["mlp"]["b_down"] = ParamDef((L, D), ("layers", "embed"), "zeros", dtype=dtype)
+    if cfg.qk_norm:
+        p["attn"]["q_norm"] = ParamDef((L, h), ("layers", None), "zeros", dtype=dtype)
+        p["attn"]["k_norm"] = ParamDef((L, h), ("layers", None), "zeros", dtype=dtype)
+    return p
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    dt = cfg.param_dtype
+    D, V = cfg.d_model, cfg.vocab_size
+    p = {
+        "tok_embed": ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt),
+        "blocks": block_param_defs(cfg, cfg.num_layers, dt),
+        "final_norm": _norm_defs((D,), cfg, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ParamDef((V, D), ("vocab", None), "embed", scale=0.02, dtype=dt)
+    return p
+
+
+def _layer_flags(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer local-attention window (0 = global)."""
+    L = cfg.num_layers
+    if cfg.attn_pattern == "global":
+        return np.zeros(L, np.int32)
+    if cfg.attn_pattern == "local":
+        return np.full(L, cfg.local_window, np.int32)
+    # local_global: one global layer every `global_every` (gemma3: 5 local : 1)
+    w = np.full(L, cfg.local_window, np.int32)
+    w[cfg.global_every - 1::cfg.global_every] = 0
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _qk_normalize(cfg, p, q, k):
+    if cfg.qk_norm:
+        q = nn.rmsnorm(q, p["q_norm"])
+        k = nn.rmsnorm(k, p["k_norm"])
+    return q, k
+
+
+def block_apply(cfg: ModelConfig, lp: Dict, h, pos, window,
+                kv_override: Optional[Tuple] = None, pos_k=None):
+    """One transformer block. `window` is a traced int32 scalar (0 = global).
+
+    kv_override, pos_k: (k, v) tensors + key positions for decode (cache).
+    Returns (h_out, (k_new, v_new)) — the fresh K/V for cache maintenance.
+    """
+    x = nn.apply_norm(cfg, h, lp["attn_norm"])
+    q, k, v = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+    q, k = _qk_normalize(cfg, lp["attn"], q, k)
+    q = nn.apply_rope(q, pos, cfg)
+    k = nn.apply_rope(k, pos, cfg)
+    k_new, v_new = k, v
+    if kv_override is not None:
+        k, v = kv_override
+        pk = pos_k
+    else:
+        pk = pos
+    out = nn.attention(q, k, v, pos, pk, causal=True, window=window,
+                       chunk_q=2048)
+    h = h + nn.attn_output(out, lp["attn"], cfg.use_bias)
+    x = nn.apply_norm(cfg, h, lp["mlp_norm"])
+    h = h + nn.mlp(x, lp["mlp"], cfg)
+    return h, (k_new, v_new)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    table = constrain(params["tok_embed"], ("vocab", None))
+    e = jnp.take(table, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.family in ("dense", "moe", "vlm") and cfg.norm == "rmsnorm":
+        e = e * jnp.sqrt(float(cfg.d_model)).astype(e.dtype)  # gemma-style scale
+    return e
+
+
+def _scan_blocks(cfg: ModelConfig, blocks, h, pos, windows, extra_xs=None,
+                 body_fn=None):
+    """lax.scan over stacked layer params with optional remat."""
+    body_fn = body_fn or (lambda carry, lp, w: block_apply(cfg, lp, carry, pos, w)[0])
+
+    axes = block_axes(cfg)
+
+    def step(carry, xs):
+        carry = constrain(carry, RESIDUAL_AXES)
+        if extra_xs is not None:
+            lp, w, ex = xs
+            out = body_fn(carry, constrain_tree(lp, axes), w, ex)
+        else:
+            lp, w = xs
+            out = body_fn(carry, constrain_tree(lp, axes), w)
+        # output constrained too: scan saves/stacks body outputs for the
+        # backward pass; unconstrained stacks accumulate replicated
+        return constrain(out, RESIDUAL_AXES), None
+
+    if cfg.remat == "full":
+        step = jax.checkpoint(step, prevent_cse=False)
+    xs = (blocks, windows) if extra_xs is None else (blocks, windows, extra_xs)
+    h, _ = jax.lax.scan(step, h, xs)
+    return h
+
+
+def hidden_states(cfg: ModelConfig, params, tokens, positions=None):
+    B, S = tokens.shape
+    pos = positions if positions is not None else jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = embed_tokens(cfg, params, tokens)
+    windows = jnp.asarray(_layer_flags(cfg))
+    h = _scan_blocks(cfg, params["blocks"], h, pos, windows)
+    return nn.apply_norm(cfg, h, params["final_norm"])
+
+
+def unembed(cfg: ModelConfig, params):
+    return params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    h = hidden_states(cfg, params, batch["tokens"])
+    return nn.lm_loss(h, unembed(cfg, params), batch["targets"],
+                      batch["mask"], softcap=cfg.logits_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict:
+    L, K, h = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    kv_dt = cfg.dtype
+    ax = ("layers", "batch", "cache_kv", "seq_shard", "head_dim")
+    return {
+        "k": ParamDef((L, batch, K, seq_len, h), ax, "zeros", dtype=kv_dt),
+        "v": ParamDef((L, batch, K, seq_len, h), ax, "zeros", dtype=kv_dt),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache_len: int):
+    """Process a full prompt; returns (last-token logits, cache dict)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = embed_tokens(cfg, params, tokens)
+    windows = jnp.asarray(_layer_flags(cfg))
+
+    axes = block_axes(cfg)
+
+    def body(carry, xs):
+        lp, w = xs
+        carry = constrain(carry, RESIDUAL_AXES)
+        out, (k, v) = block_apply(cfg, constrain_tree(lp, axes), carry, pos, w)
+        return out, (k, v)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], windows))
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, -1, :], unembed(cfg, params))
+
+    def pad_cache(x):  # [L,B,S,K,h] -> [L,B,K,cache_len,h]
+        x = x.transpose(0, 1, 3, 2, 4)
+        pad = cache_len - x.shape[3]
+        return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))).astype(jnp.dtype(cfg.dtype))
+
+    return logits.astype(jnp.float32), {"k": pad_cache(ks), "v": pad_cache(vs)}
+
+
+def decode_step(cfg: ModelConfig, params, cache: Dict, tokens, pos_scalar):
+    """One decode step. tokens [B] int32; pos_scalar [] int32 (shared position
+    — continuous batching with per-seq positions is a serve-loop concern).
+    Returns (logits [B,V] f32, updated cache).
+
+    The cache travels in the scan CARRY and is updated with per-layer
+    dynamic-update-slices: with donation this aliases in place. (The ys
+    formulation materialized a second cache copy — and XLA:CPU additionally
+    promoted the ys accumulator to f32: +12 GiB on command-r, see
+    EXPERIMENTS.md §Perf.)"""
+    B = tokens.shape[0]
+    S = cache["k"].shape[3]
+    L = cfg.num_layers
+    tok = tokens[:, None]
+    pos_q = jnp.broadcast_to(pos_scalar[None, None], (B, 1)).astype(jnp.int32)
+    pos_k = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    h = embed_tokens(cfg, params, tok)
+    windows = jnp.asarray(_layer_flags(cfg))
+
+    def body(carry, xs):
+        hh, ck_all, cv_all = carry
+        lp, w, i = xs
+        ck = jax.lax.dynamic_index_in_dim(ck_all, i, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, i, 0, keepdims=False)
+        x = nn.apply_norm(cfg, hh, lp["attn_norm"])
+        q, k, v = nn.gqa_project(x, lp["attn"], cfg, cfg.use_qkv_bias)
+        q, k = _qk_normalize(cfg, lp["attn"], q, k)
+        q = nn.apply_rope(q, pos_q, cfg)
+        k = nn.apply_rope(k, pos_q, cfg)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.transpose(0, 2, 1, 3).astype(ck.dtype), pos_scalar, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.transpose(0, 2, 1, 3).astype(cv.dtype), pos_scalar, axis=2)
+        kk = ck.transpose(0, 2, 1, 3)  # [B,S,K,h]
+        vv = cv.transpose(0, 2, 1, 3)
+        out = nn.attention(q, kk, vv, pos_q, pos_k, causal=True, window=w,
+                           chunk_q=2048, softcap=0.0)
+        hh = hh + nn.attn_output(out, lp["attn"], cfg.use_bias)
+        x = nn.apply_norm(cfg, hh, lp["mlp_norm"])
+        hh = hh + nn.mlp(x, lp["mlp"], cfg)
+        ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, i, 0)
+        cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, i, 0)
+        return (hh, ck_all, cv_all), None
+
+    (h, new_k, new_v), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["blocks"], windows, jnp.arange(L)))
+    h = nn.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, 0, :], unembed(cfg, params))
+    return logits.astype(jnp.float32), {"k": new_k, "v": new_v}

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    make_optimizer,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import make_schedule
+
+__all__ = ["Optimizer", "make_optimizer", "clip_by_global_norm",
+           "make_schedule"]

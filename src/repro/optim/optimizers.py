@@ -1,0 +1,102 @@
+"""Optimizers over pytree directions.
+
+The paper's update is plain SGD on the variance-reduced direction v
+(Algorithm 1: u ← u − η v); `sgd` is therefore the paper-faithful choice.
+`momentum` and `adamw` are beyond-paper options that consume v as the
+gradient estimate (SVRG-as-estimator), useful for the LM examples.
+
+Each optimizer is (init(params) -> opt_state, apply(v, opt_state, lr,
+params) -> (new_params, new_opt_state)). States are pytrees so the
+checkpointer and pjit shard them like params.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.utils.tree import global_norm, tree_zeros_like
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable[[Any], Any]
+    apply: Callable[..., Tuple[Any, Any]]   # (v, opt_state, lr, params, step)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    if max_norm <= 0:
+        return tree, jnp.zeros((), jnp.float32)
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def _sgd(cfg: TrainConfig) -> Optimizer:
+    wd = cfg.weight_decay
+
+    def init(params):
+        return {}
+
+    def apply(v, opt_state, lr, params, step):
+        def upd(p, g):
+            g = g + wd * p if wd else g
+            return (p - lr * g).astype(p.dtype)
+        return jax.tree.map(upd, params, v), opt_state
+
+    return Optimizer("sgd", init, apply)
+
+
+def _momentum(cfg: TrainConfig) -> Optimizer:
+    beta = cfg.beta1
+    wd = cfg.weight_decay
+
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def apply(v, opt_state, lr, params, step):
+        m = jax.tree.map(lambda mo, g: beta * mo + g, opt_state["m"], v)
+        def upd(p, mi):
+            g = mi + wd * p if wd else mi
+            return (p - lr * g).astype(p.dtype)
+        return jax.tree.map(upd, params, m), {"m": m}
+
+    return Optimizer("momentum", init, apply)
+
+
+def _adamw(cfg: TrainConfig) -> Optimizer:
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params)}
+
+    def apply(v, opt_state, lr, params, step):
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g,
+                         opt_state["m"], v)
+        s = jax.tree.map(lambda so, g: b2 * so + (1 - b2) * g * g,
+                         opt_state["v"], v)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, mi, si):
+            mhat = mi / c1
+            shat = si / c2
+            return (p - lr * (mhat / (jnp.sqrt(shat) + eps) + wd * p)).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, s), {"m": m, "v": s}
+
+    return Optimizer("adamw", init, apply)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    name = "sgd" if cfg.optimizer == "svrg" else cfg.optimizer
+    if name == "sgd":
+        return _sgd(cfg)
+    if name == "momentum":
+        return _momentum(cfg)
+    if name == "adamw":
+        return _adamw(cfg)
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig):
+    base = cfg.learning_rate
+    warm = max(1, cfg.warmup_steps)
+    total = max(cfg.steps, warm + 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warmup = base * jnp.minimum(1.0, step / warm)
+        if cfg.schedule == "constant":
+            return warmup
+        frac = jnp.clip((step - warm) / max(1, total - warm), 0.0, 1.0)
+        if cfg.schedule == "linear":
+            decay = base * (1.0 - frac)
+        else:  # cosine
+            decay = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warm, warmup, decay)
+
+    return schedule

@@ -1,0 +1,3 @@
+from repro.serve.loop import ServeSession, generate
+
+__all__ = ["ServeSession", "generate"]

@@ -1,0 +1,68 @@
+"""Batched serving loop: prefill + greedy/temperature decode.
+
+The decode step is a single jit'd function over (params, cache, token, pos)
+— the same function the decode_* dry-run cells lower at pod scale. The
+session object owns the cache and position; `generate` drives a fixed batch
+of requests (continuous batching with per-request positions is left as the
+documented extension point; the cache layout already supports it since
+positions enter as data).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ServeConfig
+from repro.models.factory import ModelBundle
+
+
+class ServeSession:
+    def __init__(self, bundle: ModelBundle, params, cache_len: int,
+                 scfg: Optional[ServeConfig] = None):
+        self.bundle = bundle
+        self.params = params
+        self.cache_len = cache_len
+        self.scfg = scfg or ServeConfig()
+        self._prefill = jax.jit(
+            lambda p, b: bundle.prefill_fn(p, b, cache_len))
+        self._decode = jax.jit(bundle.decode_fn, donate_argnums=(1,))
+        self.cache = None
+        self.pos = 0
+
+    def prefill(self, batch):
+        logits, self.cache = self._prefill(self.params, batch)
+        self.pos = batch["tokens"].shape[1]
+        return logits
+
+    def decode(self, tokens):
+        logits, self.cache = self._decode(
+            self.params, self.cache, tokens, jnp.asarray(self.pos, jnp.int32))
+        self.pos += 1
+        return logits
+
+
+def _sample(logits, temperature: float, key):
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(bundle: ModelBundle, params, batch, max_new_tokens: int,
+             cache_len: int, temperature: float = 0.0, seed: int = 0):
+    """Prefill `batch` then decode max_new_tokens greedily; returns
+    [B, max_new_tokens] int32 tokens."""
+    sess = ServeSession(bundle, params, cache_len)
+    key = jax.random.PRNGKey(seed)
+    logits = sess.prefill(batch)
+    outs = []
+    tok = _sample(logits, temperature, key)
+    outs.append(tok)
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits = sess.decode(tok)
+        tok = _sample(logits, temperature, sub)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,21 @@
+from repro.sharding.rules import (
+    ParamDef,
+    DEFAULT_RULES,
+    logical_to_pspec,
+    defs_to_shardings,
+    defs_to_shape_structs,
+    init_from_defs,
+    batch_pspec,
+    act_sharding_constraint,
+)
+
+__all__ = [
+    "ParamDef",
+    "DEFAULT_RULES",
+    "logical_to_pspec",
+    "defs_to_shardings",
+    "defs_to_shape_structs",
+    "init_from_defs",
+    "batch_pspec",
+    "act_sharding_constraint",
+]

@@ -1,0 +1,94 @@
+"""Trace-time mesh context for activation sharding constraints.
+
+Model code is mesh-agnostic; the launcher (dryrun/train) installs the mesh +
+rule table here before tracing, and models call :func:`constrain` with
+LOGICAL axis names. Outside a mesh context it is a no-op, so smoke tests on
+one CPU device run the identical code path.
+
+Key constraints applied (see DESIGN.md §4 and EXPERIMENTS.md §Perf):
+  * attention/moe/encdec/vlm residual stream: ("batch", "seq_shard", None)
+    — sequence-parallel saved activations (fits 32k prefill / 4k train).
+  * ssm/hybrid residual stream: ("batch", None, "model")
+    — channel sharding: RG-LRU / selective-scan recurrences are elementwise
+    over channels, so the seq-wise scan never crosses devices.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import DEFAULT_RULES, logical_to_pspec
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules():
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules=None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", DEFAULT_RULES)
+    _state.mesh = mesh
+    _state.rules = rules or DEFAULT_RULES
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+def constrain(x, logical_axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(x.shape, logical_axes, mesh, current_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_heads_or_seq(x, head_axis: str = "heads"):
+    """Attention q/k/v [B, S, N, h]: shard heads over `model` when the head
+    count divides it, else fall back to sequence sharding. Keeps the f32
+    score tensors sharded for archs whose head counts (10, 20, 8...) do not
+    divide a 16-way TP axis."""
+    mesh = current_mesh()
+    if mesh is None or x.ndim != 4:
+        return x
+    rules = current_rules()
+    target = rules.get(head_axis)
+    target = (target,) if isinstance(target, str) else (target or ())
+    size = 1
+    for a in target:
+        size *= mesh.shape.get(a, 1)
+    if size > 1 and x.shape[2] % size == 0:
+        return constrain(x, ("batch", None, head_axis, None))
+    return constrain(x, ("batch", "seq_shard", None, None))
+
+
+def constrain_tree(tree, axes_strs):
+    """Constrain every leaf by its "a|b|c" axis string (from
+    rules.layer_axes_strs). Applied to the SLICED layer params at scan-body
+    entry: the primal constraint keeps the forward all-gather per-layer, and
+    autodiff mirrors it onto the cotangent — per-layer weight grads become
+    reduce-scattered instead of replicated (the +24 GiB/device failure mode
+    recorded in EXPERIMENTS.md §Perf)."""
+    if current_mesh() is None:
+        return tree
+
+    def one(x, s: str):
+        axes = tuple(a if a else None for a in s.split("|")) if s else ()
+        if len(axes) != x.ndim:
+            return x
+        return constrain(x, axes)
+
+    return jax.tree.map(one, tree, axes_strs)

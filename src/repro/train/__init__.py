@@ -1,0 +1,4 @@
+from repro.train.state import TrainState, make_train_state_defs, make_train_step
+from repro.train.loop import train
+
+__all__ = ["TrainState", "make_train_state_defs", "make_train_step", "train"]

@@ -1,0 +1,80 @@
+"""Host-side training loop: SVRG snapshot scheduling, checkpoint/restart,
+metrics. Works identically on 1 CPU device (examples/tests) and on a pod
+mesh (shardings come from the ParamDef rules; the loop never branches on
+device count).
+
+Fault tolerance:
+  * auto-resume: if checkpoint_dir holds a valid step, training continues
+    from it (the data pipeline is counter-based, so the step number IS the
+    cursor).
+  * step-atomic async checkpoints every checkpoint_every steps.
+  * SVRG epoch barrier: snapshot passes are separate jit fns; a failure
+    between them re-runs the snapshot from the restored step (idempotent).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.config import TrainConfig
+from repro.models.factory import ModelBundle
+from repro.train.state import (
+    TrainState, init_train_state, make_snapshot_fns, make_train_step)
+from repro.utils.misc import log
+
+
+def train(bundle: ModelBundle, tcfg: TrainConfig,
+          batch_at: Callable[[int], Any],
+          snapshot_batch_at: Optional[Callable[[int], Any]] = None,
+          hooks: Optional[Callable[[int, Dict], None]] = None) -> TrainState:
+    """Run tcfg.steps training steps. `batch_at(step)` supplies data
+    (counter-based — restart-safe)."""
+    is_svrg = tcfg.optimizer == "svrg"
+    snapshot_batch_at = snapshot_batch_at or batch_at
+
+    step_fn = jax.jit(make_train_step(bundle, tcfg), donate_argnums=(0,))
+    if is_svrg:
+        begin_fn, accum_fn, finalize_fn = make_snapshot_fns(bundle, tcfg)
+        begin_fn = jax.jit(begin_fn, donate_argnums=(0,))
+        accum_fn = jax.jit(accum_fn, donate_argnums=(0,))
+        finalize_fn = jax.jit(finalize_fn, donate_argnums=(0,))
+
+    ckpt = Checkpointer(tcfg.checkpoint_dir, tcfg.keep_checkpoints)
+    state = init_train_state(jax.random.PRNGKey(tcfg.seed), bundle, tcfg)
+    start_step = 0
+    if tcfg.checkpoint_dir and ckpt.list_steps():
+        state, start_step = ckpt.restore(state)
+        log(f"resumed from checkpoint step {start_step}")
+
+    def refresh_snapshot(state: TrainState, step: int) -> TrainState:
+        state = begin_fn(state)
+        for j in range(tcfg.svrg.snapshot_batches):
+            state = accum_fn(state, snapshot_batch_at(step * 131 + j))
+        state = finalize_fn(state)
+        # finalize sets w_snap = params: force a REAL copy, or the next
+        # donating step_fn sees the same buffer twice ("donate(a), donate(a)")
+        w_snap = jax.tree.map(lambda x: jnp.array(x), state.svrg.w_snap)
+        return state._replace(svrg=state.svrg._replace(w_snap=w_snap))
+
+    t0 = time.perf_counter()
+    for step in range(start_step, tcfg.steps):
+        if is_svrg and step % tcfg.svrg.snapshot_every == 0:
+            state = refresh_snapshot(state, step)
+        state, metrics = step_fn(state, batch_at(step))
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            log(f"step {step}: loss={m['loss']:.4f} |v|={m['v_norm']:.3f} "
+                f"lr={m['lr']:.2e} ({dt:.1f}s)")
+            if hooks:
+                hooks(step, m)
+        if tcfg.checkpoint_dir and (step + 1) % tcfg.checkpoint_every == 0:
+            ckpt.save(state, step + 1, blocking=False)
+    ckpt.wait()
+    if tcfg.checkpoint_dir:
+        ckpt.save(state, tcfg.steps, blocking=True)
+    return state

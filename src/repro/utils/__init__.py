@@ -1,0 +1,30 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_l2norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    global_norm,
+    tree_size,
+    tree_bytes,
+)
+from repro.utils.misc import fmt_bytes, fmt_flops, Timer, log
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_dot",
+    "tree_l2norm",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "global_norm",
+    "tree_size",
+    "tree_bytes",
+    "fmt_bytes",
+    "fmt_flops",
+    "Timer",
+    "log",
+]

@@ -1,0 +1,41 @@
+"""Small logging / formatting / timing helpers (no external deps)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def log(msg: str) -> None:
+    print(f"[repro] {msg}", file=sys.stderr, flush=True)
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def fmt_flops(n: float) -> str:
+    for unit in ("F", "KF", "MF", "GF", "TF"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}PF"
+
+
+class Timer:
+    """Wall-clock timer context manager."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self._t0
+        return False

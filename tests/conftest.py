@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see ONE CPU device (the dry-run sets its own
+# 512-device flag in its own process). Nothing here touches device counts.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,92 @@
+"""Reading-scheme semantics + delay-schedule invariants (paper §4.1–4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SVRGConfig
+from repro.core import LogisticRegression, make_delay_schedule, run_asysvrg
+from repro.core.asysvrg import (
+    _read_consistent, _read_inconsistent, _read_unlock)
+from repro.data.libsvm import make_synthetic_libsvm
+
+
+@pytest.fixture(scope="module")
+def obj():
+    ds = make_synthetic_libsvm("rcv1", seed=2, scale=0.02)
+    return LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 2000), st.integers(0, 32), st.integers(0, 10))
+def test_delay_schedule_bounded(num, tau, seed):
+    """Property: every schedule satisfies 0 ≤ d_m ≤ min(m, τ) — the paper's
+    bounded-delay requirement."""
+    for kind in ("fixed", "uniform", "zero"):
+        d = np.asarray(make_delay_schedule(
+            kind, num, tau, jax.random.PRNGKey(seed)))
+        m = np.arange(num)
+        assert (d >= 0).all()
+        assert (d <= np.minimum(m, tau)).all()
+
+
+def _mk_buffer(tau, dim, key):
+    # buffer[j] = iterate of age j (distinct constant per age for testing)
+    return jnp.tile(jnp.arange(tau + 1, dtype=jnp.float32)[:, None],
+                    (1, dim))
+
+
+def test_consistent_read_is_single_age():
+    """Consistent reading returns ONE whole iterate (locked read)."""
+    tau, dim = 4, 16
+    buf = _mk_buffer(tau, dim, None)
+    got = _read_consistent(buf, lambda a: jnp.mod(a, tau + 1),
+                           jnp.asarray(2), jnp.asarray(4),
+                           jax.random.PRNGKey(0), dim)
+    assert len(np.unique(np.asarray(got))) == 1     # all coords same age
+
+
+def test_inconsistent_read_mixes_two_adjacent_ages():
+    """Eq. 10: û mixes coordinates of EXACTLY ages a and a+1."""
+    tau, dim = 4, 512
+    buf = _mk_buffer(tau, dim, None)
+    got = np.asarray(_read_inconsistent(
+        buf, lambda a: jnp.mod(a, tau + 1), jnp.asarray(1), jnp.asarray(4),
+        jax.random.PRNGKey(1), dim))
+    ages = np.unique(got)
+    assert set(ages).issubset({1.0, 2.0})
+    assert len(ages) == 2    # with 512 coords both ages appear whp
+
+
+def test_unlock_read_spans_full_window():
+    """Unlock: coordinate ages span the whole [a, m] window."""
+    tau, dim = 4, 2048
+    buf = _mk_buffer(tau, dim, None)
+    got = np.asarray(_read_unlock(
+        buf, lambda a: jnp.mod(a, tau + 1), jnp.asarray(0), jnp.asarray(4),
+        jax.random.PRNGKey(2), dim))
+    ages = set(np.unique(got))
+    assert ages == {0.0, 1.0, 2.0, 3.0, 4.0}
+
+
+@pytest.mark.parametrize("delay_kind", ["fixed", "uniform"])
+def test_convergence_robust_to_delay_schedule(obj, delay_kind):
+    cfg = SVRGConfig(scheme="inconsistent", step_size=2.0, num_threads=8,
+                     tau=7)
+    res = run_asysvrg(obj, epochs=4, cfg=cfg, seed=5, delay_kind=delay_kind)
+    assert res.history[-1] < res.history[0]
+    assert all(b <= a * 1.05 for a, b in zip(res.history, res.history[1:]))
+
+
+def test_larger_tau_never_diverges_smaller_rate(obj):
+    """More staleness (larger τ) can slow but must not break convergence
+    at a conservative step size (Theorem 1's qualitative content)."""
+    gaps = {}
+    for tau in (0, 4, 16):
+        cfg = SVRGConfig(scheme="consistent", step_size=0.5,
+                         num_threads=tau + 1, tau=tau)
+        res = run_asysvrg(obj, epochs=3, cfg=cfg, seed=6)
+        gaps[tau] = res.history[-1]
+    assert gaps[16] < res.history[0]            # still converging
+    assert gaps[0] <= gaps[16] * 1.1            # τ=0 at least as good

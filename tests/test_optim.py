@@ -1,0 +1,73 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import TrainConfig
+from repro.optim import clip_by_global_norm, make_optimizer, make_schedule
+
+
+def _cfg(**kw):
+    return TrainConfig(**kw)
+
+
+def test_sgd_step():
+    opt = make_optimizer(_cfg(optimizer="sgd"))
+    params = {"w": jnp.ones(4)}
+    v = {"w": jnp.full(4, 2.0)}
+    new, _ = opt.apply(v, opt.init(params), 0.5, params, 0)
+    np.testing.assert_allclose(np.asarray(new["w"]), np.zeros(4))
+
+
+def test_momentum_accumulates():
+    opt = make_optimizer(_cfg(optimizer="momentum", beta1=0.5))
+    params = {"w": jnp.zeros(1)}
+    st = opt.init(params)
+    v = {"w": jnp.ones(1)}
+    p1, st = opt.apply(v, st, 1.0, params, 0)       # m=1, w=-1
+    p2, st = opt.apply(v, st, 1.0, p1, 1)           # m=1.5, w=-2.5
+    np.testing.assert_allclose(np.asarray(p2["w"]), [-2.5])
+
+
+def test_adamw_direction_and_decay():
+    opt = make_optimizer(_cfg(optimizer="adamw", weight_decay=0.0))
+    params = {"w": jnp.zeros(3)}
+    st = opt.init(params)
+    v = {"w": jnp.asarray([1.0, -1.0, 2.0])}
+    new, st = opt.apply(v, st, 0.1, params, 0)
+    # first adam step ≈ -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               [-0.1, 0.1, -0.1], atol=1e-3)
+
+
+def test_svrg_optimizer_is_sgd():
+    assert make_optimizer(_cfg(optimizer="svrg")).name == "sgd"
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full(4, 3.0), "b": jnp.full(9, 4.0)}
+    # norm = sqrt(4*9 + 9*16) = sqrt(180)
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(180.0), rtol=1e-5)
+    total = np.sqrt(sum(float(jnp.sum(x * x))
+                        for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(total, 1.0, rtol=1e-4)
+    # no-clip path
+    same, _ = clip_by_global_norm(tree, 1e9)
+    np.testing.assert_allclose(np.asarray(same["a"]), 3.0)
+
+
+def test_schedules():
+    cfg = _cfg(steps=100, warmup_steps=10, learning_rate=1.0,
+               schedule="cosine")
+    s = make_schedule(cfg)
+    assert float(s(0)) == 0.0
+    np.testing.assert_allclose(float(s(10)), 1.0, atol=1e-6)
+    assert float(s(99)) < 0.01
+    lin = make_schedule(_cfg(steps=100, warmup_steps=0, learning_rate=2.0,
+                             schedule="linear"))
+    np.testing.assert_allclose(float(lin(50)), 1.0, atol=0.05)
+    const = make_schedule(_cfg(schedule="constant", warmup_steps=1,
+                               learning_rate=3.0))
+    np.testing.assert_allclose(float(const(50)), 3.0)

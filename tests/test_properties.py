@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    compressed_update, init_error_feedback, topk_compress)
+from repro.core.distributed import svrg_direction
+from repro.kernels.svrg_update.ref import svrg_update_ref
+from repro.utils.tree import (
+    tree_add, tree_axpy, tree_dot, tree_l2norm, tree_scale, tree_sub)
+
+floats = st.floats(-10, 10, allow_nan=False, allow_subnormal=False, width=32)
+arrays = st.lists(floats, min_size=1, max_size=32).map(
+    lambda xs: jnp.asarray(xs, jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays, arrays.map(lambda x: x), st.floats(-3, 3, width=32))
+def test_tree_axpy_linearity(a, b, alpha):
+    n = min(a.shape[0], b.shape[0])
+    a, b = a[:n], b[:n]
+    out = tree_axpy(alpha, {"x": a}, {"x": b})
+    np.testing.assert_allclose(np.asarray(out["x"]),
+                               alpha * np.asarray(a) + np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays)
+def test_tree_norm_matches_numpy(a):
+    got = float(tree_l2norm({"x": a, "y": 2.0 * a}))
+    want = float(np.sqrt((np.asarray(a) ** 2).sum() * 5.0))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(arrays, st.floats(0.01, 0.99))
+def test_topk_decomposition_lossless(a, frac):
+    """compress(x) + residual(x) == x — error feedback's soundness."""
+    comp, res = topk_compress({"x": a}, frac)
+    np.testing.assert_allclose(np.asarray(comp["x"] + res["x"]),
+                               np.asarray(a), rtol=1e-6, atol=1e-6)
+    # top-k keeps the largest |.| coordinates
+    k = max(1, int(a.shape[0] * frac))
+    kept = np.nonzero(np.asarray(comp["x"]))[0]
+    assert len(kept) <= k
+
+
+@settings(max_examples=20, deadline=None)
+@given(arrays)
+def test_svrg_direction_identities(g):
+    """v(g, g, gs) == gs and v(g, 0, 0) == g — Eq. 2 edge cases."""
+    zeros = {"x": jnp.zeros_like(g)}
+    gs = {"x": g * 0.5}
+    v1 = svrg_direction({"x": g}, {"x": g}, gs)
+    np.testing.assert_allclose(np.asarray(v1["x"]), np.asarray(gs["x"]))
+    v2 = svrg_direction({"x": g}, zeros, zeros)
+    np.testing.assert_allclose(np.asarray(v2["x"]), np.asarray(g))
+
+
+@settings(max_examples=20, deadline=None)
+@given(arrays, st.floats(0.001, 1.0), st.floats(0.0, 0.1))
+def test_svrg_update_fixed_point(u, lr, wd):
+    """u is a fixed point of the update iff v + wd·u == 0."""
+    zero = jnp.zeros_like(u)
+    out = svrg_update_ref(u, zero, zero, zero, lr, wd=0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(u))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_synthetic_data_deterministic(seed):
+    from repro.data.synthetic_lm import SyntheticLMDataset
+    ds1 = SyntheticLMDataset(256, 16, 4, seed=seed)
+    ds2 = SyntheticLMDataset(256, 16, 4, seed=seed)
+    b1, b2 = ds1.batch_at(3), ds2.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 256
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8))
+def test_synthetic_data_sharding_partition(num_shards):
+    """Shards partition the global batch exactly."""
+    from repro.data.synthetic_lm import SyntheticLMDataset
+    gb = 8 * num_shards
+    full = SyntheticLMDataset(128, 8, gb, seed=1).batch_at(2)["tokens"]
+    parts = [SyntheticLMDataset(128, 8, gb, seed=1, shard_index=i,
+                                num_shards=num_shards).batch_at(2)["tokens"]
+             for i in range(num_shards)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full)

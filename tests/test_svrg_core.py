@@ -1,0 +1,110 @@
+"""Algorithmic invariants of the SVRG core (paper Algorithm 1 + Lemmas)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SVRGConfig
+from repro.core import LogisticRegression, run_asysvrg, run_svrg
+from repro.core.asysvrg import asysvrg_epoch, parallel_full_grad
+from repro.core.svrg import svrg_epoch
+from repro.data.libsvm import make_synthetic_libsvm
+
+
+@pytest.fixture(scope="module")
+def obj():
+    ds = make_synthetic_libsvm("real-sim", seed=1, scale=0.01)
+    return LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+
+
+def test_partitioned_full_grad_exact(obj):
+    """The paper's φ_a partition: Σ_a φ_a == n·∇f (thread partition exact)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (obj.p,)) * 0.3
+    g = obj.full_grad(w)
+    for p_threads in (1, 3, 8):
+        gp = parallel_full_grad(obj, w, p_threads)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gp), atol=1e-6)
+
+
+def test_control_variate_unbiased(obj):
+    """E_i[v] = ∇f(u) — the SVRG estimator is unbiased (Eq. 2)."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (obj.p,)) * 0.1
+    u0 = jnp.zeros(obj.p)
+    mu = obj.full_grad(u0)
+    vs = jnp.stack([obj.sample_grad(w, i) - obj.sample_grad(u0, i) + mu
+                    for i in range(obj.n)])
+    np.testing.assert_allclose(np.asarray(vs.mean(0)),
+                               np.asarray(obj.full_grad(w)), atol=1e-5)
+
+
+def test_variance_vanishes_at_snapshot_optimum(obj):
+    """Var[v] -> 0 as u -> u_0 (the variance-reduction property that gives
+    the linear rate; plain SGD keeps nonzero variance)."""
+    key = jax.random.PRNGKey(2)
+    u0 = jax.random.normal(key, (obj.p,)) * 0.1
+    mu = obj.full_grad(u0)
+
+    def var_at(u):
+        vs = jnp.stack([obj.sample_grad(u, i) - obj.sample_grad(u0, i) + mu
+                        for i in range(0, obj.n, 7)])
+        return float(jnp.mean(jnp.sum((vs - vs.mean(0)) ** 2, -1)))
+
+    v_far = var_at(u0 + 0.5)
+    v_near = var_at(u0 + 0.01)
+    v_at = var_at(u0)
+    assert v_at < 1e-10
+    assert v_near < v_far
+
+
+def test_tau_zero_matches_sequential_svrg(obj):
+    """τ=0 ⇒ AsySVRG degenerates to sequential SVRG (paper §3), bit-exact."""
+    w = jnp.zeros(obj.p)
+    key = jax.random.PRNGKey(3)
+    cfg = SVRGConfig(scheme="consistent", step_size=1.0, num_threads=1,
+                     tau=0, inner_steps=200, option=2)
+    w_asy = asysvrg_epoch(obj, w, key, cfg)
+
+    # reference: same RNG consumption pattern as the engine
+    k_idx, k_delay, k_scan = jax.random.split(key, 3)
+    idx = jax.random.randint(k_idx, (200,), 0, obj.n)
+    mu = obj.full_grad(w)
+    u, acc = w, jnp.zeros_like(w)
+    for i in np.asarray(idx):
+        v = obj.sample_grad(u, i) - obj.sample_grad(w, i) + mu
+        u = u - 1.0 * v
+        acc = acc + u
+    np.testing.assert_allclose(np.asarray(w_asy), np.asarray(acc / 200),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_option1_vs_option2(obj):
+    """Option 1 (last iterate) and option 2 (average) both converge; the
+    engine honors the switch."""
+    f0 = float(obj.loss(jnp.zeros(obj.p)))
+    for option in (1, 2):
+        cfg = SVRGConfig(scheme="consistent", step_size=1.0, num_threads=4,
+                         tau=3, option=option)
+        res = run_asysvrg(obj, epochs=2, cfg=cfg, seed=4)
+        assert res.history[-1] < f0
+
+
+def test_svrg_epoch_reduces_objective(obj):
+    w = jnp.zeros(obj.p)
+    w1 = svrg_epoch(obj, w, jax.random.PRNGKey(5), step_size=1.0,
+                    num_inner=2 * obj.n)
+    assert float(obj.loss(w1)) < float(obj.loss(w))
+
+
+def test_smoothness_bound_valid(obj):
+    """L from smoothness() upper-bounds observed gradient Lipschitz ratios
+    (Assumption 1)."""
+    L = obj.smoothness()
+    key = jax.random.PRNGKey(6)
+    for _ in range(5):
+        key, k1, k2 = jax.random.split(key, 3)
+        a = jax.random.normal(k1, (obj.p,)) * 0.3
+        b = jax.random.normal(k2, (obj.p,)) * 0.3
+        num = float(jnp.linalg.norm(obj.full_grad(a) - obj.full_grad(b)))
+        den = float(jnp.linalg.norm(a - b))
+        assert num <= L * den * (1 + 1e-4)
