@@ -1,11 +1,13 @@
 """Paper Figure 1 (right column): objective gap vs effective passes —
-AsySVRG (lock/unlock, 10 threads) vs Hogwild! (lock/unlock, 10 threads)."""
+AsySVRG (lock/unlock, 10 threads) vs Hogwild! (lock/unlock, 10 threads).
+
+The two AsySVRG curves come from one vectorized sweep (repro.core.sweep)."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.config import SVRGConfig
-from repro.core import LogisticRegression, run_asysvrg, run_hogwild
+from repro.core import (LogisticRegression, SweepSpec, run_hogwild,
+                        run_sweep)
 from repro.data.libsvm import make_synthetic_libsvm
 
 P = 10
@@ -18,14 +20,16 @@ def run(dataset="rcv1", scale=0.03, epochs=8, quick=False):
     obj = LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
     _, f_star = obj.optimum(max_iter=3000)
     curves = {}
+    specs = [SweepSpec(seed=0, scheme=scheme, step_size=2.0, num_threads=P,
+                       tau=P - 1)
+             for scheme in ("inconsistent", "unlock")]
+    res = run_sweep(obj, epochs, specs)
+    for c, spec in enumerate(specs):
+        curves[f"asysvrg-{spec.scheme}"] = (
+            tuple(res.effective_passes[c]), tuple(res.histories[c]))
     for scheme in ("inconsistent", "unlock"):
-        res = run_asysvrg(obj, epochs,
-                          SVRGConfig(scheme=scheme, step_size=2.0,
-                                     num_threads=P, tau=P - 1))
-        curves[f"asysvrg-{scheme}"] = (res.effective_passes, res.history)
-    for scheme in ("inconsistent", "unlock"):
-        res = run_hogwild(obj, 3 * epochs, 2.0, num_threads=P, scheme=scheme)
-        curves[f"hogwild-{scheme}"] = (res.effective_passes, res.history)
+        hog = run_hogwild(obj, 3 * epochs, 2.0, num_threads=P, scheme=scheme)
+        curves[f"hogwild-{scheme}"] = (hog.effective_passes, hog.history)
     return {"f_star": f_star, "curves": curves}
 
 

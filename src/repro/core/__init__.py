@@ -6,6 +6,7 @@ from repro.core.asysvrg import (
     run_asysvrg,
     make_delay_schedule,
 )
+from repro.core.sweep import SweepSpec, SweepResult, make_grid, run_sweep
 from repro.core.hogwild import hogwild_epoch, run_hogwild
 from repro.core.compression import (
     topk_compress,
@@ -23,6 +24,10 @@ __all__ = [
     "asysvrg_epoch",
     "run_asysvrg",
     "make_delay_schedule",
+    "SweepSpec",
+    "SweepResult",
+    "make_grid",
+    "run_sweep",
     "hogwild_epoch",
     "run_hogwild",
     "topk_compress",

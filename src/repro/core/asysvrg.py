@@ -21,6 +21,23 @@ schedule ("fixed" models p equal-speed threads in round-robin â€” Assumption 3 â
 where a gradient applied at m was read Ï„ = pâˆ’1 updates earlier; "uniform"
 models speed jitter).
 
+The epoch body (`_epoch_core`) is written to be `vmap`-able over a batch of
+(seed, scheme, step-size, Ï„, delay-kind) configurations â€” that is what
+`repro.core.sweep` compiles into ONE jitted grid run. Two design rules make
+the batched run BIT-IDENTICAL to the sequential driver here:
+
+  1. scheme / delay-kind dispatch is data (``lax.switch`` / ``where``), not
+     Python control flow, so a config batch shares one trace;
+  2. every reduction is either elementwise, a row-reduce over a trailing
+     axis, or a fixed-order `lax.scan` accumulation (see
+     objective.loss_fixed_order) â€” the shapes XLA:CPU reduces identically
+     with and without a leading batch axis. Plain `X @ w` / `jnp.mean`
+     change summation order under vmap and break bitwise equality.
+
+The inner-loop update u âˆ’ Î·(g âˆ’ g0 + gf) routes through the fused
+`kernels/svrg_update` op (4 reads + 1 write at peak HBM bandwidth on TPU;
+bit-identical jnp reference on other backends).
+
 On p-thread hardware the schemes differ in THROUGHPUT (lock cost), not in
 per-update semantics; the benchmark layer (benchmarks/table2_schemes.py)
 carries the measured-cost throughput model, while this engine carries the
@@ -34,7 +51,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SVRGConfig
-from repro.core.objective import LogisticRegression
+from repro.core.objective import (
+    LogisticRegression,
+    full_grad_stable,
+    loss_fixed_order,
+    sample_grad_stable,
+)
+from repro.kernels.svrg_update import ops as svrg_update_ops
+
+SCHEME_IDS = {"consistent": 0, "inconsistent": 1, "unlock": 2}
+DELAY_IDS = {"zero": 0, "fixed": 1, "uniform": 2}
+_UNLOCK = SCHEME_IDS["unlock"]
 
 
 class AsyRunResult(NamedTuple):
@@ -42,6 +69,23 @@ class AsyRunResult(NamedTuple):
     history: tuple          # objective value after each epoch (incl. epoch 0)
     effective_passes: tuple # cumulative effective passes at each history point
     total_updates: int
+
+
+def _delay_schedule_core(delay_id, num_updates: int, tau, key) -> jnp.ndarray:
+    """Numeric-dispatch delay schedule: 0 â‰¤ d_m â‰¤ min(m, Ï„).
+
+    ``delay_id`` and ``tau`` may be traced scalars (the sweep batches over
+    them); ``num_updates`` is static. All three kinds are computed from the
+    same key and selected elementwise, so the choice is data, not control
+    flow â€” and Ï„=0 collapses every kind to the zero schedule.
+    """
+    m = jnp.arange(num_updates)
+    cap = jnp.minimum(m, tau).astype(jnp.int32)
+    u = jax.random.uniform(key, (num_updates,))
+    uniform = jnp.floor(u * (cap + 1)).astype(jnp.int32)
+    zero = jnp.zeros((num_updates,), jnp.int32)
+    return jnp.where(delay_id == DELAY_IDS["zero"], zero,
+                     jnp.where(delay_id == DELAY_IDS["fixed"], cap, uniform))
 
 
 def make_delay_schedule(kind: str, num_updates: int, tau: int, key,
@@ -53,16 +97,10 @@ def make_delay_schedule(kind: str, num_updates: int, tau: int, key,
     "uniform":  d_m ~ U{0..min(m, Ï„)} â€” jittered thread speeds.
     "zero":     d_m = 0 â€” degenerates to sequential SVRG.
     """
-    m = jnp.arange(num_updates)
-    cap = jnp.minimum(m, tau)
-    if kind == "zero" or tau == 0:
-        return jnp.zeros(num_updates, jnp.int32)
-    if kind == "fixed":
-        return cap.astype(jnp.int32)
-    if kind == "uniform":
-        u = jax.random.uniform(key, (num_updates,))
-        return jnp.floor(u * (cap + 1)).astype(jnp.int32)
-    raise ValueError(f"unknown delay schedule {kind!r}")
+    if kind not in DELAY_IDS:
+        raise ValueError(f"unknown delay schedule {kind!r}")
+    delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[kind]
+    return _delay_schedule_core(delay_id, num_updates, tau, key)
 
 
 def _read_consistent(buffer, slot_of, a, m, key, dim):
@@ -92,6 +130,84 @@ _READERS = {
     "inconsistent": _read_inconsistent,
     "unlock": _read_unlock,
 }
+# switch branches in SCHEME_IDS order
+_READER_LIST = (_read_consistent, _read_inconsistent, _read_unlock)
+
+
+def read_dispatch(scheme_id, buffer, tau, a, m, key, dim: int):
+    """`lax.switch` over the three reading schemes.
+
+    ``scheme_id``/``tau`` may be traced (one trace serves every scheme in a
+    sweep batch); ``dim`` is static. The ring-buffer slot arithmetic uses the
+    DYNAMIC Ï„, so a buffer padded to any length â‰¥ Ï„+1 reads identically.
+    """
+    buf_len = tau + 1
+
+    def slot_of(age):
+        return jnp.mod(age, buf_len)
+
+    branches = [
+        (lambda ops, r=reader: r(ops[0], slot_of, ops[1], ops[2], ops[3], dim))
+        for reader in _READER_LIST
+    ]
+    return jax.lax.switch(scheme_id, branches, (buffer, a, m, key))
+
+
+def _epoch_core(X, y, l2: float, w, key, eta, tau, scheme_id, delay_id, *,
+                total: int, buf_len: int, option: int, drop_prob: float):
+    """One outer iteration of Algorithm 1, vmap-able over configurations.
+
+    Dynamic (batchable): w, key, eta, tau, scheme_id, delay_id.
+    Static (shared by the batch): total = MÌƒ = pM, buf_len â‰¥ max Ï„ + 1,
+    option, drop_prob.
+    """
+    n, dim = X.shape
+    k_idx, k_delay, k_scan = jax.random.split(key, 3)
+    mu = full_grad_stable(X, y, l2, w)                  # parallel snapshot pass
+    u0 = w
+    idx = jax.random.randint(k_idx, (total,), 0, n)
+    delays = _delay_schedule_core(delay_id, total, tau, k_delay)
+
+    buffer = jnp.tile(u0[None, :], (buf_len, 1))        # slot m%(Ï„+1) = u_m
+
+    def body(carry, inp):
+        u, buffer, acc = carry
+        m, i, d, k = inp
+        k_read, k_drop = jax.random.split(k)
+        a = jnp.maximum(m - d, 0)
+        u_read = read_dispatch(scheme_id, buffer, tau, a, m, k_read, dim)
+        g = sample_grad_stable(X, y, l2, u_read, i)
+        g0 = sample_grad_stable(X, y, l2, u0, i)
+        gf = mu
+        if drop_prob > 0:
+            # unlock write-write race: drop a random coordinate fraction.
+            # Masking the three inputs with the same 0/1 mask equals masking
+            # v = g âˆ’ g0 + gf (exact for 0/1 factors), which keeps the update
+            # expressible as the fused kernel's 4-read form.
+            keep = jax.random.bernoulli(
+                k_drop, 1.0 - drop_prob, (dim,)).astype(u.dtype)
+            mask = jnp.where(scheme_id == _UNLOCK, keep, jnp.ones_like(keep))
+            g, g0, gf = g * mask, g0 * mask, gf * mask
+        u_next = svrg_update_ops.apply_leaf(u, g, g0, gf, eta)
+        buffer = buffer.at[jnp.mod(m + 1, tau + 1)].set(u_next)
+        return (u_next, buffer, acc + u_next), None
+
+    keys = jax.random.split(k_scan, total)
+    ms = jnp.arange(total)
+    (u_last, _, acc), _ = jax.lax.scan(
+        body, (u0, buffer, jnp.zeros_like(u0)), (ms, idx, delays, keys))
+
+    return u_last if option == 1 else acc / total
+
+
+def _resolve_steps(obj: LogisticRegression, cfg: SVRGConfig):
+    """(p, M, MÌƒ=pM, clamped Ï„) from the config â€” paper Â§5.1 defaults."""
+    p_threads = max(1, cfg.num_threads)
+    M = cfg.inner_steps or (2 * obj.n) // p_threads
+    total = p_threads * M                               # MÌƒ = pM
+    tau = cfg.tau if cfg.tau else (p_threads - 1)
+    tau = max(0, min(tau, total - 1)) if total > 1 else 0
+    return p_threads, M, total, tau
 
 
 def asysvrg_epoch(obj: LogisticRegression, w, key, cfg: SVRGConfig,
@@ -100,79 +216,47 @@ def asysvrg_epoch(obj: LogisticRegression, w, key, cfg: SVRGConfig,
 
     Returns w_{t+1} per cfg.option (1 = final iterate, 2 = inner average).
     """
-    scheme = cfg.scheme
-    if scheme not in _READERS:
-        raise ValueError(f"unknown scheme {scheme!r}")
-    reader = _READERS[scheme]
-
-    p_threads = max(1, cfg.num_threads)
-    M = cfg.inner_steps or (2 * obj.n) // p_threads
-    total = p_threads * M                               # MÌƒ = pM
-    tau = cfg.tau if cfg.tau else (p_threads - 1)
-    tau = max(0, min(tau, total - 1)) if total > 1 else 0
-    eta = cfg.step_size
-    dim = obj.p
-
-    k_idx, k_delay, k_scan = jax.random.split(key, 3)
-    mu = obj.full_grad(w)                               # parallel snapshot pass
-    u0 = w
-    idx = jax.random.randint(k_idx, (total,), 0, obj.n)
-    delays = make_delay_schedule(
-        "zero" if tau == 0 else delay_kind, total, tau, k_delay)
-
-    buf_len = tau + 1
-    buffer = jnp.tile(u0[None, :], (buf_len, 1))        # slot m%buf_len = u_m
-
-    def slot_of(age):
-        return jnp.mod(age, buf_len)
-
-    def body(carry, inp):
-        u, buffer, acc = carry
-        m, i, d, k = inp
-        k_read, k_drop = jax.random.split(k)
-        a = jnp.maximum(m - d, 0)
-        u_read = reader(buffer, slot_of, a, m, k_read, dim)
-        v = obj.sample_grad(u_read, i) - obj.sample_grad(u0, i) + mu
-        if scheme == "unlock" and drop_prob > 0:
-            keep = jax.random.bernoulli(k_drop, 1.0 - drop_prob, (dim,))
-            v = v * keep                                # write-write race
-        u_next = u - eta * v
-        buffer = buffer.at[slot_of(m + 1)].set(u_next)
-        return (u_next, buffer, acc + u_next), None
-
-    keys = jax.random.split(k_scan, total)
-    ms = jnp.arange(total)
-    (u_last, _, acc), _ = jax.lax.scan(
-        body, (u0, buffer, jnp.zeros_like(u0)), (ms, idx, delays, keys))
-
-    return u_last if cfg.option == 1 else acc / total
+    if cfg.scheme not in SCHEME_IDS:
+        raise ValueError(f"unknown scheme {cfg.scheme!r}")
+    if delay_kind not in DELAY_IDS:
+        raise ValueError(f"unknown delay schedule {delay_kind!r}")
+    _, _, total, tau = _resolve_steps(obj, cfg)
+    delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
+    return _epoch_core(
+        obj.X, obj.y, obj.l2, w, key,
+        jnp.float32(cfg.step_size), jnp.int32(tau),
+        jnp.int32(SCHEME_IDS[cfg.scheme]), jnp.int32(delay_id),
+        total=total, buf_len=tau + 1, option=cfg.option, drop_prob=drop_prob)
 
 
 def run_asysvrg(obj: LogisticRegression, epochs: int, cfg: SVRGConfig,
                 seed: int = 0, w0=None, delay_kind: str = "fixed",
                 drop_prob: float = 0.02) -> AsyRunResult:
-    """Multi-epoch driver. Effective-pass accounting follows Â§5.1: each epoch
-    visits the dataset 3x (1 full-gradient pass + 2n inner visits when
-    MÌƒ = 2n)."""
+    """Multi-epoch driver (one configuration, one jit per call).
+
+    Effective-pass accounting follows Â§5.1: each epoch visits the dataset 3x
+    (1 full-gradient pass + 2n inner visits when MÌƒ = 2n). The history is
+    recorded with the fixed-order loss so `repro.core.sweep` reproduces it
+    bit-identically from a single batched compilation.
+    """
     w = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
     key = jax.random.PRNGKey(seed)
 
-    p_threads = max(1, cfg.num_threads)
-    M = cfg.inner_steps or (2 * obj.n) // p_threads
-    total = p_threads * M
+    _, _, total, _ = _resolve_steps(obj, cfg)
     # Â§5.1 accounting: one inner update visits ONE instance; with MÌƒ = 2n the
     # epoch visits the dataset 3x (1 snapshot pass + 2n inner visits)
     passes_per_epoch = 1.0 + total / obj.n
 
     epoch_fn = jax.jit(lambda w, k: asysvrg_epoch(
         obj, w, k, cfg, delay_kind=delay_kind, drop_prob=drop_prob))
+    loss_fn = jax.jit(lambda w: loss_fixed_order(obj.X, obj.y, obj.l2, w))
 
-    history = [float(obj.loss(w))]
+    history = [float(loss_fn(w))]
     passes = [0.0]
     for e in range(epochs):
         key, sub = jax.random.split(key)
         w = epoch_fn(w, sub)
-        history.append(float(obj.loss(w)))
+        history.append(float(loss_fn(w)))
         passes.append(passes[-1] + passes_per_epoch)
     return AsyRunResult(w=w, history=tuple(history),
                         effective_passes=tuple(passes),

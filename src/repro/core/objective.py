@@ -20,6 +20,53 @@ def _log1pexp(z):
     return jnp.logaddexp(0.0, z)
 
 
+# ---------------------------------------------------------------------------
+# vmap-bitwise-stable formulations (used by the AsySVRG engine + sweep)
+#
+# The sweep engine (repro.core.sweep) runs a batch of configurations through
+# jax.vmap and must reproduce the sequential driver BIT-identically. XLA:CPU
+# keeps row-reduces over a trailing axis and elementwise ops bitwise-stable
+# under an added leading batch axis, but changes the summation order of
+# full reductions to a scalar (jnp.mean, jnp.vdot, X @ w). The functions
+# below therefore use only row-reduces plus a fixed-order lax.scan for
+# scalar accumulation.
+# ---------------------------------------------------------------------------
+
+def _fixed_order_sum(v):
+    """Σ v_i accumulated strictly in index order (vmap-bitwise-stable)."""
+    acc, _ = jax.lax.scan(lambda a, x: (a + x, None),
+                          jnp.zeros((), v.dtype), v)
+    return acc
+
+
+def _margins_stable(X, y, w):
+    """y ⊙ (X w) as a row-reduce (stable under a leading batch axis on w)."""
+    return y * jnp.sum(X * w[None, :], axis=1)
+
+
+def loss_fixed_order(X, y, l2: float, w):
+    """f(w) with fixed-order reductions; equals LogisticRegression.loss up to
+    summation order (differences are O(n·eps))."""
+    t = _log1pexp(-_margins_stable(X, y, w))
+    n = X.shape[0]
+    return _fixed_order_sum(t) / n + 0.5 * l2 * _fixed_order_sum(w * w)
+
+
+def full_grad_stable(X, y, l2: float, w):
+    """∇f(w) via row-reduces only (vmap-bitwise-stable)."""
+    n = X.shape[0]
+    s = jax.nn.sigmoid(-_margins_stable(X, y, w))
+    return jnp.sum((-(y * s))[:, None] * X, axis=0) / n + l2 * w
+
+
+def sample_grad_stable(X, y, l2: float, w, i):
+    """∇f_i(w) (vmap-bitwise-stable)."""
+    x = X[i]
+    yi = y[i]
+    s = jax.nn.sigmoid(-yi * jnp.sum(x * w))
+    return -yi * s * x + l2 * w
+
+
 class LogisticRegression:
     """Stateless objective bound to a dataset (X, y, λ)."""
 

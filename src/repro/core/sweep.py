@@ -1,0 +1,187 @@
+"""Vectorized AsySVRG sweep engine: the whole experiment grid in ONE jit.
+
+The paper's tables sweep (reading scheme × thread count × step size × seed);
+the benchmark layer used to run each cell as its own `run_asysvrg` call —
+one trace, one compile, and epochs × Python dispatches PER CELL. This module
+turns the grid into data: every configuration becomes a row of scalar arrays
+(seed, scheme-id, step-size, τ, delay-id), the epoch body is `vmap`-ed over
+that row axis, and a `lax.scan` drives the epochs — so N×compile becomes
+1×compile and the entire grid advances in lockstep through one XLA program.
+
+Bit-exactness contract: per-config loss histories and final iterates are
+BIT-IDENTICAL to sequential `run_asysvrg` calls with the same specs (see
+tests/test_sweep.py). This is what makes the sweep a drop-in replacement for
+the benchmark loops rather than a statistical approximation of them. The
+contract holds because `_epoch_core` and `loss_fixed_order` only use
+reductions whose bits survive vmap batching (see repro.core.objective).
+
+Configurations may disagree on M̃ = pM (the inner-loop length is a static
+scan bound): `run_sweep` groups specs by (M̃, option), compiles once per
+group, and reassembles rows in input order. A grid over schemes / seeds /
+steps / τ / delay-kinds is one group; adding thread counts usually stays at
+one group too, since M = ⌊2n/p⌋ keeps pM ≈ 2n (e.g. any p dividing 2n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SVRGConfig
+from repro.core.asysvrg import (
+    DELAY_IDS,
+    SCHEME_IDS,
+    _epoch_core,
+    _resolve_steps,
+)
+from repro.core.objective import LogisticRegression, loss_fixed_order
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One grid cell: the knobs Tables 2–3 / Fig. 1 vary.
+
+    ``num_threads``/``inner_steps`` fix M̃ = pM exactly as SVRGConfig does;
+    ``tau=0`` means "derive τ = p−1" (SVRGConfig convention).
+    """
+    seed: int = 0
+    scheme: str = "inconsistent"
+    step_size: float = 0.1
+    tau: int = 0
+    delay_kind: str = "fixed"
+    num_threads: int = 8
+    inner_steps: int = 0
+    option: int = 2
+
+    def to_config(self) -> SVRGConfig:
+        return SVRGConfig(scheme=self.scheme, step_size=self.step_size,
+                          num_threads=self.num_threads, tau=self.tau,
+                          inner_steps=self.inner_steps, option=self.option)
+
+
+class SweepResult(NamedTuple):
+    specs: Tuple[SweepSpec, ...]
+    histories: np.ndarray         # [C, epochs+1] loss after each epoch
+    effective_passes: np.ndarray  # [C, epochs+1] cumulative effective passes
+    final_w: np.ndarray           # [C, p]
+    total_updates: np.ndarray     # [C] updates applied over all epochs
+
+    def row(self, c: int) -> Dict:
+        """One config as a flat record (for CSV-ish reporting)."""
+        s = self.specs[c]
+        return {**dataclasses.asdict(s),
+                "history": self.histories[c],
+                "effective_passes": self.effective_passes[c],
+                "total_updates": int(self.total_updates[c])}
+
+
+def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
+              seeds: Sequence[int] = (0,),
+              step_sizes: Sequence[float] = (0.1,),
+              taus: Sequence[int] = (0,),
+              delay_kinds: Sequence[str] = ("fixed",),
+              num_threads: int = 8,
+              inner_steps: int = 0,
+              option: int = 2) -> List[SweepSpec]:
+    """Cartesian grid over the paper's experiment axes, outermost-first."""
+    return [
+        SweepSpec(seed=seed, scheme=scheme, step_size=step, tau=tau,
+                  delay_kind=kind, num_threads=num_threads,
+                  inner_steps=inner_steps, option=option)
+        for scheme in schemes
+        for seed in seeds
+        for step in step_sizes
+        for tau in taus
+        for kind in delay_kinds
+    ]
+
+
+def _resolve(obj: LogisticRegression, spec: SweepSpec):
+    """(total, clamped τ, delay-id) — exactly run_asysvrg's resolution."""
+    _, _, total, tau = _resolve_steps(obj, spec.to_config())
+    if spec.delay_kind not in DELAY_IDS:
+        raise ValueError(f"unknown delay schedule {spec.delay_kind!r}")
+    if spec.scheme not in SCHEME_IDS:
+        raise ValueError(f"unknown scheme {spec.scheme!r}")
+    delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
+    return total, tau, delay_id
+
+
+def _group_runner(X, y, l2: float, epochs: int, total: int, buf_len: int,
+                  option: int, drop_prob: float):
+    """jit(vmap(per-config epochs-scan)) for one (M̃, option) group."""
+
+    def per_config(key, eta, tau, scheme_id, delay_id, w0):
+        loss0 = loss_fixed_order(X, y, l2, w0)
+
+        def step(carry, _):
+            w, key = carry
+            key, sub = jax.random.split(key)
+            w_next = _epoch_core(
+                X, y, l2, w, sub, eta, tau, scheme_id, delay_id,
+                total=total, buf_len=buf_len, option=option,
+                drop_prob=drop_prob)
+            return (w_next, key), loss_fixed_order(X, y, l2, w_next)
+
+        (w_fin, _), losses = jax.lax.scan(step, (w0, key), None, length=epochs)
+        return w_fin, jnp.concatenate([loss0[None], losses])
+
+    return jax.jit(jax.vmap(per_config))
+
+
+def run_sweep(obj: LogisticRegression, epochs: int,
+              specs: Sequence[SweepSpec], *, w0=None,
+              drop_prob: float = 0.02) -> SweepResult:
+    """Run every spec for `epochs` outer iterations in one compiled program
+    per (M̃, option) group. Histories/final iterates are bit-identical to
+    per-spec `run_asysvrg` calls."""
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("empty sweep")
+    w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+
+    resolved = [_resolve(obj, s) for s in specs]
+    groups: Dict[Tuple[int, int], List[int]] = {}
+    for c, (total, _, _) in enumerate(resolved):
+        groups.setdefault((total, specs[c].option), []).append(c)
+
+    C = len(specs)
+    histories = np.zeros((C, epochs + 1), np.float32)
+    final_w = np.zeros((C, obj.p), np.float32)
+    passes = np.zeros((C, epochs + 1), np.float64)
+    total_updates = np.zeros((C,), np.int64)
+
+    for (total, option), members in groups.items():
+        taus = [resolved[c][1] for c in members]
+        buf_len = max(taus) + 1
+        runner = _group_runner(obj.X, obj.y, obj.l2, epochs, total, buf_len,
+                               option, drop_prob)
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray([specs[c].seed for c in members]))
+        w_fin, hist = runner(
+            keys,
+            jnp.asarray([specs[c].step_size for c in members], jnp.float32),
+            jnp.asarray(taus, jnp.int32),
+            jnp.asarray([SCHEME_IDS[specs[c].scheme] for c in members],
+                        jnp.int32),
+            jnp.asarray([resolved[c][2] for c in members], jnp.int32),
+            jnp.tile(w_init[None, :], (len(members), 1)),
+        )
+        hist = np.asarray(hist)
+        w_fin = np.asarray(w_fin)
+        ppe = 1.0 + total / obj.n
+        for row, c in enumerate(members):
+            histories[c] = hist[row]
+            final_w[c] = w_fin[row]
+            acc = [0.0]
+            for _ in range(epochs):        # same float accumulation order as
+                acc.append(acc[-1] + ppe)  # run_asysvrg's Python loop
+            passes[c] = acc
+            total_updates[c] = epochs * total
+
+    return SweepResult(specs=specs, histories=histories,
+                       effective_passes=passes, final_w=final_w,
+                       total_updates=total_updates)

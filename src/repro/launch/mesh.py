@@ -3,11 +3,13 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state — the dry-run sets XLA_FLAGS before first jax init,
 and smoke tests must keep seeing 1 CPU device.
+
+Mesh construction goes through repro.utils.compat so the same code runs on
+JAX 0.4.x (no AxisType) and newer releases (Auto axis types requested).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.utils.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,11 +21,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     (8,16,16) 2048-chip mesh needs no model-code changes."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh with the production axis names (CPU smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,71 @@
+"""JAX cross-version compatibility shims — the single import point for APIs
+that moved or were renamed between the JAX versions we support (0.4.3x LTS
+through current).
+
+Covered surfaces:
+
+  * ``jax.sharding.AxisType`` + the ``axis_types=`` kwarg of
+    ``jax.make_mesh`` — added after 0.4.37. :func:`make_mesh` requests
+    ``Auto`` axis types when the installed JAX understands them and silently
+    builds a plain mesh otherwise (``Auto`` is the pre-AxisType behaviour,
+    so semantics are unchanged).
+  * ``pallas.tpu.CompilerParams`` vs the older ``TPUCompilerParams`` name.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.5-era
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # 0.4.x: only Auto semantics exist, implicitly
+    AxisType = None
+
+HAS_AXIS_TYPES = AxisType is not None
+
+
+def auto_axis_types(num_axes: int):
+    """``(AxisType.Auto,) * num_axes`` where expressible, else ``None``."""
+    if HAS_AXIS_TYPES:
+        return (AxisType.Auto,) * num_axes
+    return None
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None):
+    """``jax.make_mesh`` with ``Auto`` axis types when supported.
+
+    On JAX 0.4.x (no ``AxisType``, no ``axis_types=`` kwarg) this degrades to
+    the plain call, which has identical semantics — every axis was
+    implicitly Auto before the kwarg existed.
+    """
+    if HAS_AXIS_TYPES:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                                 axis_types=auto_axis_types(len(axis_names)))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+    # pre-0.4.31: assemble the Mesh by hand
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = list(devices) if devices is not None else jax.devices()
+    size = int(np.prod(axis_shapes))
+    return Mesh(np.asarray(devs[:size]).reshape(tuple(axis_shapes)),
+                tuple(axis_names))
+
+
+def tpu_compiler_params(*, dimension_semantics: Optional[Sequence[str]] = None,
+                        **kwargs):
+    """Build Pallas-TPU compiler params under either class name.
+
+    ``TPUCompilerParams`` (<= 0.4.x / 0.5.x) was renamed ``CompilerParams``;
+    both accept ``dimension_semantics``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics, **kwargs)

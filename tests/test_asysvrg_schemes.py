@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional dev dep (requirements-dev.txt); only the property test needs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.config import SVRGConfig
 from repro.core import LogisticRegression, make_delay_schedule, run_asysvrg
@@ -18,17 +23,31 @@ def obj():
     return LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 2000), st.integers(0, 32), st.integers(0, 10))
-def test_delay_schedule_bounded(num, tau, seed):
-    """Property: every schedule satisfies 0 ≤ d_m ≤ min(m, τ) — the paper's
-    bounded-delay requirement."""
+def _check_delay_bounds(num, tau, seed):
+    """0 ≤ d_m ≤ min(m, τ) — the paper's bounded-delay requirement."""
     for kind in ("fixed", "uniform", "zero"):
         d = np.asarray(make_delay_schedule(
             kind, num, tau, jax.random.PRNGKey(seed)))
         m = np.arange(num)
         assert (d >= 0).all()
         assert (d <= np.minimum(m, tau)).all()
+
+
+@pytest.mark.parametrize("num,tau,seed", [(1, 0, 0), (17, 3, 1), (256, 32, 2),
+                                          (2000, 8, 3)])
+def test_delay_schedule_bounded(num, tau, seed):
+    _check_delay_bounds(num, tau, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 2000), st.integers(0, 32), st.integers(0, 10))
+    def test_delay_schedule_bounded_property(num, tau, seed):
+        _check_delay_bounds(num, tau, seed)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev.txt)")
+    def test_delay_schedule_bounded_property():
+        pass
 
 
 def _mk_buffer(tau, dim, key):

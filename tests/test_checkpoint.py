@@ -71,8 +71,9 @@ def test_elastic_restore_with_shardings(tmp_path):
     """Restore onto explicit (1-device) shardings — the elastic-restart
     path where the mesh changed between save and restore."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    from repro.utils.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     ck = Checkpointer(str(tmp_path))
     ck.save(_state(3.0), step=3)
     sh = {"params": {"w": NamedSharding(mesh, P("data", "model"))},

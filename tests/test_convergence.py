@@ -4,6 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# multi-epoch rate fits over full datasets: minutes of scan time — excluded
+# from the default CI job (see .github/workflows/ci.yml)
+pytestmark = pytest.mark.slow
+
 from repro.config import SVRGConfig
 from repro.core import LogisticRegression, run_asysvrg, run_hogwild, run_svrg
 from repro.data.libsvm import make_synthetic_libsvm

@@ -89,10 +89,12 @@ def test_topk_keeps_largest_and_residual_exact():
 
 
 def test_randk_unbiased():
+    # 800 trials: per-coord std = 4*sqrt(.25*.75/800) ~= 0.061, so the max
+    # deviation over 64 coords (~2.9 sigma ~= 0.18) sits well inside atol.
     key = jax.random.PRNGKey(2)
     x = {"a": jnp.ones(64)}
     outs = []
-    for i in range(200):
+    for i in range(800):
         comp, _ = randk_compress(x, 0.25, jax.random.fold_in(key, i))
         outs.append(np.asarray(comp["a"]))
     mean = np.stack(outs).mean(0)

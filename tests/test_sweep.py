@@ -1,0 +1,133 @@
+"""Vectorized sweep engine vs the sequential driver (bit-exactness contract).
+
+(a) one jitted sweep over the Table-2 grid (3 schemes × 3 seeds × 2 step
+    sizes) reproduces each config's loss history AND final iterate
+    bit-identically to a per-config `run_asysvrg` call;
+(b) the `lax.switch` reader dispatch matches the direct `_READERS` functions
+    for all three schemes;
+plus grouping across heterogeneous M̃ and delay-schedule dispatch checks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SVRGConfig
+from repro.core import (LogisticRegression, SweepSpec, make_grid,
+                        run_asysvrg, run_sweep)
+from repro.core.asysvrg import (
+    DELAY_IDS, SCHEME_IDS, _READERS, _delay_schedule_core,
+    make_delay_schedule, read_dispatch)
+from repro.data.libsvm import make_synthetic_libsvm
+
+
+@pytest.fixture(scope="module")
+def obj():
+    ds = make_synthetic_libsvm("real-sim", seed=11, scale=0.002)
+    return LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+
+
+def _assert_rows_match_sequential(obj, specs, res, epochs):
+    for c, spec in enumerate(specs):
+        seq = run_asysvrg(obj, epochs, spec.to_config(), seed=spec.seed,
+                          delay_kind=spec.delay_kind)
+        np.testing.assert_array_equal(
+            np.asarray(seq.history, np.float32), res.histories[c],
+            err_msg=f"history mismatch for {spec}")
+        np.testing.assert_array_equal(
+            np.asarray(seq.w, np.float32), res.final_w[c],
+            err_msg=f"final iterate mismatch for {spec}")
+        assert int(res.total_updates[c]) == seq.total_updates
+        np.testing.assert_allclose(res.effective_passes[c],
+                                   np.asarray(seq.effective_passes))
+
+
+def test_sweep_bit_identical_to_sequential_table2_grid(obj):
+    """Acceptance: the Table-2 scheme comparison (3 schemes × 3 seeds × 2
+    step sizes) from ONE jit matches the per-run Python-loop driver
+    bit-for-bit."""
+    epochs = 2
+    specs = make_grid(schemes=("consistent", "inconsistent", "unlock"),
+                      seeds=(0, 1, 2), step_sizes=(0.5, 2.0), taus=(3,),
+                      num_threads=4, inner_steps=25)
+    res = run_sweep(obj, epochs, specs)
+    assert res.histories.shape == (18, epochs + 1)
+    _assert_rows_match_sequential(obj, specs, res, epochs)
+
+
+def test_sweep_groups_heterogeneous_totals(obj):
+    """Specs whose M̃ = pM differ compile as separate groups but still land
+    bit-identical rows in input order (uniform delays + unlock drop model
+    exercised too)."""
+    epochs = 2
+    specs = [
+        SweepSpec(seed=3, scheme="unlock", step_size=1.0, tau=2,
+                  num_threads=3, inner_steps=20, delay_kind="uniform"),
+        SweepSpec(seed=4, scheme="inconsistent", step_size=0.5, tau=1,
+                  num_threads=2, inner_steps=25),
+        SweepSpec(seed=5, scheme="consistent", step_size=1.0, tau=0,
+                  num_threads=1, inner_steps=40),
+    ]
+    assert len({3 * 20, 2 * 25, 1 * 40}) == 3   # three distinct M̃ groups
+    res = run_sweep(obj, epochs, specs)
+    _assert_rows_match_sequential(obj, specs, res, epochs)
+
+
+def test_read_dispatch_matches_direct_readers():
+    """lax.switch dispatch == the _READERS functions, same key, all schemes."""
+    tau, dim = 4, 256
+    buffer = jnp.tile(jnp.arange(tau + 1, dtype=jnp.float32)[:, None],
+                      (1, dim))
+    a, m = jnp.asarray(1), jnp.asarray(4)
+    key = jax.random.PRNGKey(17)
+
+    def slot_of(age):
+        return jnp.mod(age, tau + 1)
+
+    for scheme, reader in _READERS.items():
+        want = reader(buffer, slot_of, a, m, key, dim)
+        got = read_dispatch(jnp.int32(SCHEME_IDS[scheme]), buffer,
+                            jnp.int32(tau), a, m, key, dim)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"scheme {scheme}")
+
+
+def test_read_dispatch_under_vmap_matches_per_scheme():
+    """One vmapped dispatch over all three scheme ids == three direct calls."""
+    tau, dim = 3, 64
+    buffer = jnp.tile(jnp.arange(tau + 1, dtype=jnp.float32)[:, None],
+                      (1, dim))
+    a, m = jnp.asarray(0), jnp.asarray(3)
+    key = jax.random.PRNGKey(23)
+    ids = jnp.asarray([0, 1, 2], jnp.int32)
+    batched = jax.vmap(
+        lambda sid: read_dispatch(sid, buffer, jnp.int32(tau), a, m, key,
+                                  dim))(ids)
+    for scheme, sid in SCHEME_IDS.items():
+        direct = read_dispatch(jnp.int32(sid), buffer, jnp.int32(tau), a, m,
+                               key, dim)
+        np.testing.assert_array_equal(np.asarray(batched[sid]),
+                                      np.asarray(direct),
+                                      err_msg=f"scheme {scheme}")
+
+
+def test_numeric_delay_dispatch_matches_string_api():
+    """The numeric-select delay core == the public string API for every kind,
+    including the τ=0 collapse to the zero schedule."""
+    key = jax.random.PRNGKey(5)
+    for tau in (0, 3, 7):
+        for kind, did in DELAY_IDS.items():
+            want = make_delay_schedule(kind, 50, tau, key)
+            eff = DELAY_IDS["zero"] if tau == 0 else did
+            got = _delay_schedule_core(jnp.int32(eff), 50, jnp.int32(tau), key)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                          err_msg=f"{kind} tau={tau}")
+
+
+def test_sweep_rejects_bad_specs(obj):
+    with pytest.raises(ValueError):
+        run_sweep(obj, 1, [])
+    with pytest.raises(ValueError):
+        run_sweep(obj, 1, [SweepSpec(scheme="nope")])
+    with pytest.raises(ValueError):
+        run_sweep(obj, 1, [SweepSpec(delay_kind="nope")])
