@@ -1,0 +1,49 @@
+"""BENCH_*.json artifact writer — the perf-trajectory record CI uploads.
+
+Every benchmark `main()` dumps its structured result as ``BENCH_<name>.json``
+(in $BENCH_DIR, default cwd) alongside the human-readable CSV on stdout. The
+CI bench-smoke job runs the benchmarks with tiny epoch counts and uploads
+these files as workflow artifacts, so every PR leaves a comparable record.
+
+Payloads are sanitized to strict JSON: numpy scalars/arrays become Python
+numbers/lists and non-finite floats become the string "inf"/"nan" (json's
+native Infinity literal is not valid JSON and breaks downstream tooling).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any
+
+import numpy as np
+
+
+def _sanitize(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        return {str(k): _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_sanitize(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _sanitize(obj.tolist())
+    if isinstance(obj, (np.integer, int)) and not isinstance(obj, bool):
+        return int(obj)
+    if isinstance(obj, (np.floating, float)):
+        f = float(obj)
+        if math.isnan(f):
+            return "nan"
+        if math.isinf(f):
+            return "inf" if f > 0 else "-inf"
+        return f
+    return obj
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Write ``BENCH_<name>.json`` under $BENCH_DIR (default: cwd)."""
+    out_dir = os.environ.get("BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as fh:
+        json.dump(_sanitize(payload), fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return path

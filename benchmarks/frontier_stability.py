@@ -1,0 +1,94 @@
+"""(step × τ) stability frontier — paper §5 discussion, as ONE sweep call.
+
+Theorem 1 ties the admissible step size to the staleness bound τ: more
+staleness shrinks the stable step region. This benchmark maps that frontier
+empirically: a grid over step sizes × τ values runs as a single
+`run_sweep` (one jit per M̃-group), each cell is classified
+stable / diverged from its loss history, and the report gives, per τ, the
+largest step that still converges.
+
+The τ=0 column is serial SVRG routed through the same engine
+(``SweepSpec(algo="svrg")`` — the zero-delay degenerate case), so the
+frontier's sequential edge and its asynchronous interior share the compiled
+path and the comparison is apples-to-apples.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.artifacts import write_bench_json
+from repro.core import LogisticRegression, SweepSpec, run_sweep
+from repro.data.libsvm import make_synthetic_libsvm
+
+P = 10
+STEPS = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0)
+TAUS = (0, 1, 3, 7, 9)
+
+
+def classify(history, f0: float) -> str:
+    """stable = finite history that ends below the starting loss."""
+    h = np.asarray(history, np.float64)
+    if not np.all(np.isfinite(h)):
+        return "diverged"
+    return "stable" if h[-1] < f0 else "diverged"
+
+
+def run(dataset: str = "rcv1", scale: float = 0.03,
+        steps=STEPS, taus=TAUS, epochs: int = 6, quick: bool = False):
+    if quick:
+        steps = tuple(steps)[1::2]
+        taus = tuple(taus)[::2]
+        epochs = 3
+    ds = make_synthetic_libsvm(dataset, scale=scale)
+    obj = LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+    f0 = float(obj.loss(np.zeros(obj.p)))
+
+    specs = []
+    for tau in taus:
+        for step in steps:
+            if tau == 0:
+                specs.append(SweepSpec(algo="svrg", step_size=step,
+                                       num_threads=1))
+            else:
+                specs.append(SweepSpec(scheme="inconsistent", step_size=step,
+                                       tau=tau, num_threads=P))
+    t0 = time.perf_counter()
+    res = run_sweep(obj, epochs, specs)
+    sweep_s = time.perf_counter() - t0
+
+    cells = []
+    for c, spec in enumerate(specs):
+        h = res.histories[c]
+        verdict = classify(h, f0)
+        final = float(h[-1])
+        cells.append({"tau": spec.tau if spec.algo != "svrg" else 0,
+                      "algo": spec.algo, "step": spec.step_size,
+                      "final_loss": final if np.isfinite(final) else None,
+                      "verdict": verdict})
+
+    frontier = {}
+    for tau in taus:
+        stable = [c["step"] for c in cells
+                  if c["tau"] == tau and c["verdict"] == "stable"]
+        frontier[tau] = max(stable) if stable else 0.0
+
+    return {"dataset": dataset, "f0": f0, "epochs": epochs,
+            "grid_size": len(specs), "sweep_s": sweep_s,
+            "cells": cells, "frontier": frontier}
+
+
+def main(quick: bool = True):
+    out = run(quick=quick)
+    write_bench_json("frontier_stability", out)
+    print("name,us_per_call,derived")
+    print(f"frontier_sweep_engine,{out['sweep_s'] * 1e6:.1f},"
+          f"cells={out['grid_size']};one_call_grid")
+    for tau, step in out["frontier"].items():
+        print(f"frontier_tau{tau},0,max_stable_step={step}")
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

@@ -11,13 +11,15 @@ paper's "time to suboptimal solution" definition).
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
+from benchmarks.artifacts import write_bench_json
+from benchmarks.cost_model import measure_primitives, wall_time
 from repro.core import LogisticRegression, SweepSpec, run_sweep
 from repro.data.libsvm import make_synthetic_libsvm
-from benchmarks.cost_model import measure_primitives, wall_time
 
 SCHEMES = ("consistent", "inconsistent", "unlock")
 
@@ -66,6 +68,7 @@ def run(scale=0.03, step=2.0, threads=(2, 4, 8, 10), quick=False):
 
 def main(quick=True):
     out = run(quick=quick)
+    write_bench_json("table2_schemes", out)
     print("name,us_per_call,derived")
     print(f"table2_sweep_engine,{out['sweep_s'] * 1e6:.1f},"
           f"configs={out['grid_size']};one_jit_grid")
@@ -76,4 +79,4 @@ def main(quick=True):
 
 
 if __name__ == "__main__":
-    main(quick=False)
+    main(quick="--quick" in sys.argv)

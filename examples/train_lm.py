@@ -8,7 +8,6 @@ against the plain-SGD baseline (the Hogwild!-equivalent compute).
 """
 import argparse
 
-import jax
 
 from repro.config import ModelConfig, SVRGConfig, TrainConfig
 from repro.data.synthetic_lm import SyntheticLMDataset

@@ -1,12 +1,18 @@
 from repro.core.objective import LogisticRegression
-from repro.core.svrg import svrg_epoch, run_svrg
+from repro.core.svrg import svrg_epoch, run_svrg, sweep_spec as svrg_sweep_spec
 from repro.core.asysvrg import (
     AsyRunResult,
     asysvrg_epoch,
     run_asysvrg,
     make_delay_schedule,
 )
-from repro.core.sweep import SweepSpec, SweepResult, make_grid, run_sweep
+from repro.core.sweep import (
+    ALGOS,
+    SweepSpec,
+    SweepResult,
+    make_grid,
+    run_sweep,
+)
 from repro.core.hogwild import hogwild_epoch, run_hogwild
 from repro.core.compression import (
     topk_compress,
@@ -20,6 +26,8 @@ __all__ = [
     "LogisticRegression",
     "svrg_epoch",
     "run_svrg",
+    "svrg_sweep_spec",
+    "ALGOS",
     "AsyRunResult",
     "asysvrg_epoch",
     "run_asysvrg",

@@ -23,8 +23,11 @@ models speed jitter).
 
 The epoch body (`_epoch_core`) is written to be `vmap`-able over a batch of
 (seed, scheme, step-size, τ, delay-kind) configurations — that is what
-`repro.core.sweep` compiles into ONE jitted grid run. Two design rules make
-the batched run BIT-IDENTICAL to the sequential driver here:
+`repro.core.sweep` compiles into ONE jitted grid run (and, via the `algo`
+axis, the same engine also serves serial-SVRG rows as the τ=0 degenerate
+case; `repro.core.hogwild` reuses the dispatch-as-data pieces for the
+baseline). Two design rules make the batched run BIT-IDENTICAL to the
+sequential driver here:
 
   1. scheme / delay-kind dispatch is data (``lax.switch`` / ``where``), not
      Python control flow, so a config batch shares one trace;
@@ -45,7 +48,7 @@ convergence behaviour. Together they reproduce Tables 2–3 and Figure 1.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

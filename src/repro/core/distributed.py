@@ -20,8 +20,7 @@ Three pieces:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +28,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.config import SVRGConfig
-from repro.core.compression import (
-    ErrorFeedbackState, compressed_update, init_error_feedback)
+from repro.core.compression import compressed_update, init_error_feedback
 from repro.utils.tree import tree_add, tree_scale, tree_sub, tree_zeros_like
 
 

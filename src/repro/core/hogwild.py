@@ -7,50 +7,78 @@ asynchrony). Experiment settings follow the paper §5.1: each epoch runs n/p
 iterations per thread (1 effective pass), constant step γ decayed by 0.9
 per epoch ("These settings are the same as those in the experiments in
 Hogwild!").
+
+Like `repro.core.asysvrg`, the epoch body (`_hogwild_epoch_core`) is written
+to be `vmap`-able over a batch of (seed, scheme, step, τ, delay-kind, decay)
+configurations: scheme/delay dispatch is data (`read_dispatch` /
+`_delay_schedule_core`), every reduction is vmap-bitwise-stable, and the
+per-epoch γ ← decay·γ schedule is threaded through the `lax.scan` carry of
+`_hogwild_epochs_core` so the whole multi-epoch run — decay included — is
+ONE compiled program. `repro.core.sweep` vmaps that program over a config
+grid; `run_hogwild` here drives the identical program for a single config,
+which is what makes the sweep rows bit-identical to this sequential driver
+on XLA:CPU (tests/test_sweep_hogwild.py).
 """
 from __future__ import annotations
-
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.asysvrg import AsyRunResult, _READERS, make_delay_schedule
-from repro.core.objective import LogisticRegression
+from repro.core.asysvrg import (
+    _UNLOCK,
+    AsyRunResult,
+    DELAY_IDS,
+    SCHEME_IDS,
+    _delay_schedule_core,
+    read_dispatch,
+)
+from repro.core.objective import (
+    LogisticRegression,
+    loss_fixed_order,
+    sample_grad_stable,
+)
 
 
-def hogwild_epoch(obj: LogisticRegression, w, key, step_size: float,
-                  num_threads: int, tau: int = -1, scheme: str = "unlock",
-                  drop_prob: float = 0.02):
-    reader = _READERS[scheme]
+def _resolve_hogwild_steps(n: int, num_threads: int, tau: int):
+    """(p, total = (n // p)·p, clamped τ) — the ONE place this arithmetic
+    lives; `run_hogwild`'s update bookkeeping and the sweep engine both
+    derive from it, so the two can never drift."""
     p_threads = max(1, num_threads)
-    total = max(1, (obj.n // p_threads)) * p_threads     # n/p per thread
+    total = max(1, n // p_threads) * p_threads          # n/p per thread
     tau = (p_threads - 1) if tau < 0 else tau
     tau = max(0, min(tau, total - 1))
-    dim = obj.p
+    return p_threads, total, tau
 
+
+def _hogwild_epoch_core(X, y, l2: float, w, key, gamma, tau, scheme_id,
+                        delay_id, *, total: int, buf_len: int,
+                        drop_prob: float):
+    """One Hogwild! epoch (total async updates), vmap-able over configs.
+
+    Dynamic (batchable): w, key, gamma, tau, scheme_id, delay_id.
+    Static (shared by the batch): total, buf_len ≥ max τ + 1, drop_prob.
+    """
+    n, dim = X.shape
     k_idx, k_delay, k_scan = jax.random.split(key, 3)
-    idx = jax.random.randint(k_idx, (total,), 0, obj.n)
-    delays = make_delay_schedule("zero" if tau == 0 else "fixed",
-                                 total, tau, k_delay)
-    buf_len = tau + 1
-    buffer = jnp.tile(w[None, :], (buf_len, 1))
-
-    def slot_of(age):
-        return jnp.mod(age, buf_len)
+    idx = jax.random.randint(k_idx, (total,), 0, n)
+    delays = _delay_schedule_core(delay_id, total, tau, k_delay)
+    buffer = jnp.tile(w[None, :], (buf_len, 1))         # slot m%(τ+1) = u_m
 
     def body(carry, inp):
         u, buffer = carry
         m, i, d, k = inp
         k_read, k_drop = jax.random.split(k)
         a = jnp.maximum(m - d, 0)
-        u_read = reader(buffer, slot_of, a, m, k_read, dim)
-        v = obj.sample_grad(u_read, i)
-        if scheme == "unlock" and drop_prob > 0:
-            keep = jax.random.bernoulli(k_drop, 1.0 - drop_prob, (dim,))
-            v = v * keep
-        u_next = u - step_size * v
-        buffer = buffer.at[slot_of(m + 1)].set(u_next)
+        u_read = read_dispatch(scheme_id, buffer, tau, a, m, k_read, dim)
+        v = sample_grad_stable(X, y, l2, u_read, i)
+        if drop_prob > 0:
+            # unlock write-write race: drop a random coordinate fraction
+            keep = jax.random.bernoulli(
+                k_drop, 1.0 - drop_prob, (dim,)).astype(u.dtype)
+            mask = jnp.where(scheme_id == _UNLOCK, keep, jnp.ones_like(keep))
+            v = v * mask
+        u_next = u - gamma * v
+        buffer = buffer.at[jnp.mod(m + 1, tau + 1)].set(u_next)
         return (u_next, buffer), None
 
     keys = jax.random.split(k_scan, total)
@@ -59,27 +87,80 @@ def hogwild_epoch(obj: LogisticRegression, w, key, step_size: float,
     return u_last
 
 
+def _hogwild_epochs_core(X, y, l2: float, w0, key, gamma0, decay, tau,
+                         scheme_id, delay_id, *, epochs: int, total: int,
+                         buf_len: int, drop_prob: float):
+    """`epochs` Hogwild! epochs as one `lax.scan`, γ ← decay·γ in the carry.
+
+    Returns (w_final, losses[epochs+1]) with the fixed-order loss recorded
+    after every epoch (index 0 = loss at w0) — the decay schedule and the
+    history both live INSIDE the compiled program, so a vmap over configs
+    batches them too.
+    """
+    loss0 = loss_fixed_order(X, y, l2, w0)
+
+    def step(carry, _):
+        w, key, gamma = carry
+        key, sub = jax.random.split(key)
+        w_next = _hogwild_epoch_core(
+            X, y, l2, w, sub, gamma, tau, scheme_id, delay_id,
+            total=total, buf_len=buf_len, drop_prob=drop_prob)
+        return ((w_next, key, gamma * decay),
+                loss_fixed_order(X, y, l2, w_next))
+
+    (w_fin, _, _), losses = jax.lax.scan(
+        step, (w0, key, gamma0), None, length=epochs)
+    return w_fin, jnp.concatenate([loss0[None], losses])
+
+
+def hogwild_epoch(obj: LogisticRegression, w, key, step_size: float,
+                  num_threads: int, tau: int = -1, scheme: str = "unlock",
+                  drop_prob: float = 0.02, delay_kind: str = "fixed"):
+    """One Hogwild! epoch (public single-config wrapper over the core)."""
+    if scheme not in SCHEME_IDS:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    if delay_kind not in DELAY_IDS:
+        raise ValueError(f"unknown delay schedule {delay_kind!r}")
+    _, total, tau = _resolve_hogwild_steps(obj.n, num_threads, tau)
+    delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
+    return _hogwild_epoch_core(
+        obj.X, obj.y, obj.l2, w, key,
+        jnp.float32(step_size), jnp.int32(tau),
+        jnp.int32(SCHEME_IDS[scheme]), jnp.int32(delay_id),
+        total=total, buf_len=tau + 1, drop_prob=drop_prob)
+
+
 def run_hogwild(obj: LogisticRegression, epochs: int, step_size: float,
                 num_threads: int = 8, decay: float = 0.9,
                 scheme: str = "unlock", tau: int = -1, seed: int = 0,
-                w0=None) -> AsyRunResult:
+                w0=None, delay_kind: str = "fixed",
+                drop_prob: float = 0.02) -> AsyRunResult:
+    """Multi-epoch driver (one configuration, ONE jit for the whole run).
+
+    The γ-decay schedule and the per-epoch loss history are computed inside
+    the compiled epochs-scan (`_hogwild_epochs_core`), so a `run_sweep` over
+    Hogwild! configs reproduces this driver bit-identically from a single
+    batched compilation. `total_updates` derives from the same
+    `total = (n // p)·p` expression the epoch core scans over.
+    """
+    if scheme not in SCHEME_IDS:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    if delay_kind not in DELAY_IDS:
+        raise ValueError(f"unknown delay schedule {delay_kind!r}")
     w = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
     key = jax.random.PRNGKey(seed)
-    gamma = step_size
+    _, total, tau = _resolve_hogwild_steps(obj.n, num_threads, tau)
+    delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
 
-    epoch_fn = jax.jit(lambda w, k, g: hogwild_epoch(
-        obj, w, k, g, num_threads, tau=tau, scheme=scheme))
+    runner = jax.jit(lambda w0_, k, g0, d: _hogwild_epochs_core(
+        obj.X, obj.y, obj.l2, w0_, k, g0, d,
+        jnp.int32(tau), jnp.int32(SCHEME_IDS[scheme]), jnp.int32(delay_id),
+        epochs=epochs, total=total, buf_len=tau + 1, drop_prob=drop_prob))
+    w_fin, losses = runner(w, key, jnp.float32(step_size),
+                           jnp.float32(decay))
 
-    history = [float(obj.loss(w))]
-    passes = [0.0]
-    total_updates = 0
-    for e in range(epochs):
-        key, sub = jax.random.split(key)
-        w = epoch_fn(w, sub, gamma)
-        gamma = gamma * decay                     # paper: γ ← 0.9 γ per epoch
-        history.append(float(obj.loss(w)))
-        passes.append(passes[-1] + 1.0)           # 1 effective pass per epoch
-        total_updates += max(1, obj.n // max(1, num_threads)) * num_threads
-    return AsyRunResult(w=w, history=tuple(history),
-                        effective_passes=tuple(passes),
-                        total_updates=total_updates)
+    return AsyRunResult(
+        w=w_fin,
+        history=tuple(float(v) for v in losses),
+        effective_passes=tuple(float(e) for e in range(epochs + 1)),
+        total_updates=epochs * total)               # same total as the scan

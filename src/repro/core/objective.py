@@ -9,7 +9,7 @@ L-smooth with L ≤ max_i ||x_i||²/4 + λ, and f is λ-strongly convex.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

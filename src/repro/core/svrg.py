@@ -5,15 +5,35 @@ sequential (single-thread) version of SVRG." This module IS that degenerate
 case, used (a) as the single-thread baseline for the speedup metric and
 (b) as the bit-exact oracle the delay engine must match at τ=0
 (tested in tests/test_asysvrg_schemes.py).
+
+For grid runs, serial SVRG is routed through the SAME compiled path as the
+delay engine: `repro.core.sweep` maps ``SweepSpec(algo="svrg")`` onto
+`asysvrg._epoch_core` with τ=0 / zero delays / consistent reads, so SVRG
+rows share the vmapped jit with AsySVRG rows of equal M̃ and option.
+`sweep_spec` below builds that spec from `run_svrg`'s arguments.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.objective import LogisticRegression
+
+
+def sweep_spec(step_size: float, num_inner: Optional[int] = None,
+               option: int = 2, seed: int = 0):
+    """`run_svrg(obj, E, step_size, num_inner, option, seed)` as a sweep row.
+
+    The returned ``SweepSpec(algo="svrg")`` runs on the zero-delay degenerate
+    path of the AsySVRG engine (`repro.core.sweep`); `num_inner=None` keeps
+    the 2n default, resolved against the objective at `run_sweep` time.
+    """
+    from repro.core.sweep import SweepSpec   # deferred: keep core import-light
+    return SweepSpec(algo="svrg", step_size=step_size,
+                     inner_steps=num_inner or 0, option=option, seed=seed,
+                     num_threads=1, scheme="consistent", tau=0)
 
 
 class SVRGEpochStats(NamedTuple):

@@ -1,30 +1,47 @@
-"""Vectorized AsySVRG sweep engine: the whole experiment grid in ONE jit.
+"""Multi-algorithm sweep engine: the whole experiment grid in ONE jit.
 
-The paper's tables sweep (reading scheme × thread count × step size × seed);
-the benchmark layer used to run each cell as its own `run_asysvrg` call —
-one trace, one compile, and epochs × Python dispatches PER CELL. This module
-turns the grid into data: every configuration becomes a row of scalar arrays
-(seed, scheme-id, step-size, τ, delay-id), the epoch body is `vmap`-ed over
-that row axis, and a `lax.scan` drives the epochs — so N×compile becomes
-1×compile and the entire grid advances in lockstep through one XLA program.
+The paper's tables and figures are *comparisons* — AsySVRG vs Hogwild! vs
+serial SVRG over (reading scheme × thread count × step size × seed × τ).
+The benchmark layer used to run each cell as its own `run_*` call — one
+trace, one compile, and epochs × Python dispatches PER CELL. This module
+turns the grid into data: every configuration becomes a row of scalar
+arrays (seed, algo, scheme-id, step-size, τ, delay-id, decay), the epoch
+body is `vmap`-ed over that row axis, and a `lax.scan` drives the epochs —
+so N×compile becomes 1×compile and the entire grid advances in lockstep
+through one XLA program.
+
+The `algo` axis selects the epoch engine per row:
+
+  * ``"asysvrg"`` — Algorithm 1 via `asysvrg._epoch_core` (the paper's
+    contribution: SVRG control variate under bounded-delay reads);
+  * ``"hogwild"`` — the baseline via `hogwild._hogwild_epochs_core`, same
+    bounded-delay read semantics, no control variate, with the per-epoch
+    γ ← decay·γ schedule threaded through the scan carry so decay lives
+    inside the compiled program;
+  * ``"svrg"``    — serial SVRG routed through the SAME asysvrg path as the
+    zero-delay degenerate case (τ=0, zero delay schedule, consistent reads
+    — "If τ=0, AsySVRG degenerates to the sequential version of SVRG").
+    SVRG rows therefore ride in the same vmapped batch (same jit) as
+    asysvrg rows whenever their M̃ and option agree.
 
 Bit-exactness contract: per-config loss histories and final iterates are
-BIT-IDENTICAL to sequential `run_asysvrg` calls with the same specs (see
-tests/test_sweep.py). This is what makes the sweep a drop-in replacement for
-the benchmark loops rather than a statistical approximation of them. The
-contract holds because `_epoch_core` and `loss_fixed_order` only use
-reductions whose bits survive vmap batching (see repro.core.objective).
+BIT-IDENTICAL to sequential `run_asysvrg` / `run_hogwild` calls with the
+same specs (tests/test_sweep.py, tests/test_sweep_hogwild.py). This is what
+makes the sweep a drop-in replacement for the benchmark loops rather than a
+statistical approximation of them. The contract holds because both epoch
+cores and `loss_fixed_order` only use reductions whose bits survive vmap
+batching (see repro.core.objective).
 
-Configurations may disagree on M̃ = pM (the inner-loop length is a static
-scan bound): `run_sweep` groups specs by (M̃, option), compiles once per
-group, and reassembles rows in input order. A grid over schemes / seeds /
-steps / τ / delay-kinds is one group; adding thread counts usually stays at
-one group too, since M = ⌊2n/p⌋ keeps pM ≈ 2n (e.g. any p dividing 2n).
+Configurations may disagree on M̃ (a static scan bound): `run_sweep` groups
+specs by (engine, M̃, option), compiles once per group, and reassembles rows
+in input order. A grid over schemes / seeds / steps / τ / delay-kinds is
+one group per algo; adding thread counts usually stays at one group too,
+since M = ⌊2n/p⌋ keeps pM ≈ 2n (e.g. any p dividing 2n).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,15 +54,28 @@ from repro.core.asysvrg import (
     _epoch_core,
     _resolve_steps,
 )
+from repro.core.hogwild import _hogwild_epochs_core, _resolve_hogwild_steps
 from repro.core.objective import LogisticRegression, loss_fixed_order
+
+ALGOS = ("asysvrg", "hogwild", "svrg")
+# svrg rows run on the asysvrg engine (τ=0 degenerate case), so two engines
+_ENGINE_ASYSVRG = "asysvrg"
+_ENGINE_HOGWILD = "hogwild"
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """One grid cell: the knobs Tables 2–3 / Fig. 1 vary.
 
-    ``num_threads``/``inner_steps`` fix M̃ = pM exactly as SVRGConfig does;
-    ``tau=0`` means "derive τ = p−1" (SVRGConfig convention).
+    ``algo`` picks the epoch engine ("asysvrg" / "hogwild" / "svrg").
+    τ conventions follow each algorithm's sequential driver:
+      * asysvrg: ``tau=0`` means "derive τ = p−1" (SVRGConfig convention);
+        ``num_threads``/``inner_steps`` fix M̃ = pM exactly as SVRGConfig.
+      * hogwild: ``tau=-1`` derives τ = p−1 and ``tau=0`` is genuinely zero
+        delay (`run_hogwild` convention); M̃ = (n // p)·p.
+      * svrg: τ forced to 0 and reads forced consistent — the degenerate
+        case; M̃ = ``inner_steps`` or 2n (`run_svrg` convention).
+    ``decay`` is the per-epoch γ ← decay·γ factor (hogwild only).
     """
     seed: int = 0
     scheme: str = "inconsistent"
@@ -55,6 +85,8 @@ class SweepSpec:
     num_threads: int = 8
     inner_steps: int = 0
     option: int = 2
+    algo: str = "asysvrg"
+    decay: float = 0.9
 
     def to_config(self) -> SVRGConfig:
         return SVRGConfig(scheme=self.scheme, step_size=self.step_size,
@@ -85,12 +117,24 @@ def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
               delay_kinds: Sequence[str] = ("fixed",),
               num_threads: int = 8,
               inner_steps: int = 0,
-              option: int = 2) -> List[SweepSpec]:
-    """Cartesian grid over the paper's experiment axes, outermost-first."""
+              option: int = 2,
+              algo: str = "asysvrg",
+              decay: float = 0.9) -> List[SweepSpec]:
+    """Cartesian grid over the paper's experiment axes, outermost-first.
+
+    The ``taus`` axis uses ONE convention for every algo: 0 means "derive
+    τ = p−1". For hogwild rows that is translated to the driver's ``-1``
+    sentinel, so the default grid is a real asynchronous baseline, not the
+    zero-delay degenerate one (build `SweepSpec(algo="hogwild", tau=0)`
+    directly for genuinely zero delay).
+    """
+    if algo == "hogwild":
+        taus = [-1 if t == 0 else t for t in taus]
     return [
         SweepSpec(seed=seed, scheme=scheme, step_size=step, tau=tau,
                   delay_kind=kind, num_threads=num_threads,
-                  inner_steps=inner_steps, option=option)
+                  inner_steps=inner_steps, option=option, algo=algo,
+                  decay=decay)
         for scheme in schemes
         for seed in seeds
         for step in step_sizes
@@ -99,20 +143,48 @@ def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
     ]
 
 
-def _resolve(obj: LogisticRegression, spec: SweepSpec):
-    """(total, clamped τ, delay-id) — exactly run_asysvrg's resolution."""
-    _, _, total, tau = _resolve_steps(obj, spec.to_config())
+class _Resolved(NamedTuple):
+    engine: str          # "asysvrg" | "hogwild" (svrg routes to asysvrg)
+    total: int           # M̃, the static inner-scan bound
+    tau: int
+    scheme_id: int
+    delay_id: int
+    option: int          # 0 for hogwild (engine has no option switch)
+    passes_per_epoch: float
+
+
+def _resolve(obj: LogisticRegression, spec: SweepSpec) -> _Resolved:
+    """Per-spec resolution, delegating to each algorithm's own arithmetic."""
+    if spec.algo not in ALGOS:
+        raise ValueError(f"unknown algo {spec.algo!r}")
     if spec.delay_kind not in DELAY_IDS:
         raise ValueError(f"unknown delay schedule {spec.delay_kind!r}")
     if spec.scheme not in SCHEME_IDS:
         raise ValueError(f"unknown scheme {spec.scheme!r}")
+
+    if spec.algo == "hogwild":
+        _, total, tau = _resolve_hogwild_steps(obj.n, spec.num_threads,
+                                               spec.tau)
+        delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
+        return _Resolved(_ENGINE_HOGWILD, total, tau,
+                         SCHEME_IDS[spec.scheme], delay_id, 0, 1.0)
+
+    if spec.algo == "svrg":
+        # the zero-delay degenerate case on the asysvrg engine (paper §3)
+        total = spec.inner_steps or 2 * obj.n
+        return _Resolved(_ENGINE_ASYSVRG, total, 0,
+                         SCHEME_IDS["consistent"], DELAY_IDS["zero"],
+                         spec.option, 1.0 + total / obj.n)
+
+    _, _, total, tau = _resolve_steps(obj, spec.to_config())
     delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
-    return total, tau, delay_id
+    return _Resolved(_ENGINE_ASYSVRG, total, tau, SCHEME_IDS[spec.scheme],
+                     delay_id, spec.option, 1.0 + total / obj.n)
 
 
-def _group_runner(X, y, l2: float, epochs: int, total: int, buf_len: int,
-                  option: int, drop_prob: float):
-    """jit(vmap(per-config epochs-scan)) for one (M̃, option) group."""
+def _asysvrg_group_runner(X, y, l2: float, epochs: int, total: int,
+                          buf_len: int, option: int, drop_prob: float):
+    """jit(vmap(per-config epochs-scan)) for one asysvrg/svrg group."""
 
     def per_config(key, eta, tau, scheme_id, delay_id, w0):
         loss0 = loss_fixed_order(X, y, l2, w0)
@@ -132,21 +204,34 @@ def _group_runner(X, y, l2: float, epochs: int, total: int, buf_len: int,
     return jax.jit(jax.vmap(per_config))
 
 
+def _hogwild_group_runner(X, y, l2: float, epochs: int, total: int,
+                          buf_len: int, drop_prob: float):
+    """jit(vmap(multi-epoch Hogwild! scan, γ-decay in the carry))."""
+
+    def per_config(key, gamma0, decay, tau, scheme_id, delay_id, w0):
+        return _hogwild_epochs_core(
+            X, y, l2, w0, key, gamma0, decay, tau, scheme_id, delay_id,
+            epochs=epochs, total=total, buf_len=buf_len,
+            drop_prob=drop_prob)
+
+    return jax.jit(jax.vmap(per_config))
+
+
 def run_sweep(obj: LogisticRegression, epochs: int,
               specs: Sequence[SweepSpec], *, w0=None,
               drop_prob: float = 0.02) -> SweepResult:
     """Run every spec for `epochs` outer iterations in one compiled program
-    per (M̃, option) group. Histories/final iterates are bit-identical to
-    per-spec `run_asysvrg` calls."""
+    per (engine, M̃, option) group. Histories/final iterates are bit-identical
+    to per-spec `run_asysvrg` / `run_hogwild` calls."""
     specs = tuple(specs)
     if not specs:
         raise ValueError("empty sweep")
     w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
 
     resolved = [_resolve(obj, s) for s in specs]
-    groups: Dict[Tuple[int, int], List[int]] = {}
-    for c, (total, _, _) in enumerate(resolved):
-        groups.setdefault((total, specs[c].option), []).append(c)
+    groups: Dict[Tuple[str, int, int], List[int]] = {}
+    for c, r in enumerate(resolved):
+        groups.setdefault((r.engine, r.total, r.option), []).append(c)
 
     C = len(specs)
     histories = np.zeros((C, epochs + 1), np.float32)
@@ -154,31 +239,42 @@ def run_sweep(obj: LogisticRegression, epochs: int,
     passes = np.zeros((C, epochs + 1), np.float64)
     total_updates = np.zeros((C,), np.int64)
 
-    for (total, option), members in groups.items():
-        taus = [resolved[c][1] for c in members]
+    for (engine, total, option), members in groups.items():
+        taus = [resolved[c].tau for c in members]
         buf_len = max(taus) + 1
-        runner = _group_runner(obj.X, obj.y, obj.l2, epochs, total, buf_len,
-                               option, drop_prob)
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray([specs[c].seed for c in members]))
-        w_fin, hist = runner(
-            keys,
-            jnp.asarray([specs[c].step_size for c in members], jnp.float32),
-            jnp.asarray(taus, jnp.int32),
-            jnp.asarray([SCHEME_IDS[specs[c].scheme] for c in members],
-                        jnp.int32),
-            jnp.asarray([resolved[c][2] for c in members], jnp.int32),
-            jnp.tile(w_init[None, :], (len(members), 1)),
-        )
+        etas = jnp.asarray([specs[c].step_size for c in members],
+                           jnp.float32)
+        taus_a = jnp.asarray(taus, jnp.int32)
+        scheme_ids = jnp.asarray([resolved[c].scheme_id for c in members],
+                                 jnp.int32)
+        delay_ids = jnp.asarray([resolved[c].delay_id for c in members],
+                                jnp.int32)
+        w0_rows = jnp.tile(w_init[None, :], (len(members), 1))
+
+        if engine == _ENGINE_HOGWILD:
+            runner = _hogwild_group_runner(obj.X, obj.y, obj.l2, epochs,
+                                           total, buf_len, drop_prob)
+            decays = jnp.asarray([specs[c].decay for c in members],
+                                 jnp.float32)
+            w_fin, hist = runner(keys, etas, decays, taus_a, scheme_ids,
+                                 delay_ids, w0_rows)
+        else:
+            runner = _asysvrg_group_runner(obj.X, obj.y, obj.l2, epochs,
+                                           total, buf_len, option, drop_prob)
+            w_fin, hist = runner(keys, etas, taus_a, scheme_ids, delay_ids,
+                                 w0_rows)
+
         hist = np.asarray(hist)
         w_fin = np.asarray(w_fin)
-        ppe = 1.0 + total / obj.n
         for row, c in enumerate(members):
             histories[c] = hist[row]
             final_w[c] = w_fin[row]
+            ppe = resolved[c].passes_per_epoch
             acc = [0.0]
             for _ in range(epochs):        # same float accumulation order as
-                acc.append(acc[-1] + ppe)  # run_asysvrg's Python loop
+                acc.append(acc[-1] + ppe)  # the sequential drivers' loops
             passes[c] = acc
             total_updates[c] = epochs * total
 

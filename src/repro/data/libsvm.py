@@ -12,7 +12,7 @@ original's CSR layout does not map (recorded in DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 import jax.numpy as jnp

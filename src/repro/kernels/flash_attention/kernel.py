@@ -83,8 +83,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == nk - 1)
     def _finish():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        l_sum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l_sum).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

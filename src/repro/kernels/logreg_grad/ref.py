@@ -5,7 +5,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def logreg_grad_ref(X, y, w, l2: float):

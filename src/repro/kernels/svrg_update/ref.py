@@ -7,7 +7,6 @@ weight decay. The fused kernel must match this to float32 precision.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 
 def svrg_update_ref(u, g, g0, gf, lr, wd: float = 0.0):

@@ -19,7 +19,6 @@ Usage:
       --mesh single multi --out experiments/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -29,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SHAPE_GRID, SVRGConfig, ShapeConfig, TrainConfig
-from repro.configs import get_config, list_configs
+from repro.configs import get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
     collective_bytes_with_trips, count_params, jaxpr_cost, model_flops,

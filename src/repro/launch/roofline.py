@@ -20,11 +20,9 @@ MODEL_FLOPS/HLO_FLOPs ratio exposes remat recompute and SVRG's intrinsic
 """
 from __future__ import annotations
 
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import numpy as np
 
 from repro.config import HardwareSpec, ModelConfig, ShapeConfig, TPU_V5E
 

@@ -15,7 +15,7 @@ import argparse
 
 import jax
 
-from repro.config import SVRGConfig, ShapeConfig, TrainConfig
+from repro.config import SVRGConfig, TrainConfig
 from repro.configs import get_config, list_configs, reduced_config
 from repro.data.synthetic_lm import SyntheticLMDataset
 from repro.models.factory import build_model

@@ -13,7 +13,7 @@ MHA (num_kv_heads == num_heads), tied embeddings, no RoPE.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,10 +9,10 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.config import ModelConfig, ShapeConfig
-from repro.sharding.rules import batch_pspec, defs_to_shape_structs
+from repro.sharding.rules import batch_pspec
 
 
 @dataclass

@@ -14,7 +14,7 @@ position vectors per block — an explicit [S, S] mask is never materialized.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ sequence length, which is why this arch runs the long_500k cell.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

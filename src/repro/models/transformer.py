@@ -14,7 +14,6 @@ because GQA kv-head counts (1–20) do not divide a 16-way TP axis.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

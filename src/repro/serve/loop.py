@@ -13,7 +13,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ServeConfig
 from repro.models.factory import ModelBundle

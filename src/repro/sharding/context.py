@@ -19,7 +19,7 @@ import threading
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.sharding.rules import DEFAULT_RULES, logical_to_pspec
 

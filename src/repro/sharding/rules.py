@@ -19,7 +19,7 @@ analysis honest).
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

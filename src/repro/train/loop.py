@@ -14,7 +14,7 @@ Fault tolerance:
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

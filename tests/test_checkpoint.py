@@ -1,9 +1,6 @@
 """Fault-tolerance: checkpoint atomicity, retention, resume, corruption."""
-import json
 import os
-import shutil
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,4 @@
 """Theorem-facing convergence-rate checks (Thms 1–2 qualitative content)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

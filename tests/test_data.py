@@ -1,5 +1,4 @@
 """Data pipeline: determinism, restart-safety, libsvm parsing, paper stats."""
-import os
 
 import numpy as np
 import pytest

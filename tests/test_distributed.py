@@ -3,15 +3,25 @@ error feedback, wire-size accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import SVRGConfig
 from repro.core.compression import (
-    ErrorFeedbackState, compressed_bytes, compressed_update,
-    init_error_feedback, int8_compress, randk_compress, topk_compress)
+    compressed_bytes,
+    compressed_update,
+    init_error_feedback,
+    int8_compress,
+    randk_compress,
+    topk_compress,
+)
 from repro.core.distributed import (
-    SVRGState, bounded_staleness_epoch, init_svrg_state, reshape_for_workers,
-    snapshot_accumulate, snapshot_begin, snapshot_finalize, svrg_direction)
+    bounded_staleness_epoch,
+    init_svrg_state,
+    reshape_for_workers,
+    snapshot_accumulate,
+    snapshot_begin,
+    snapshot_finalize,
+    svrg_direction,
+)
 from repro.launch.mesh import make_host_mesh
 
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import TrainConfig
 from repro.optim import clip_by_global_norm, make_optimizer, make_schedule

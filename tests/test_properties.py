@@ -1,5 +1,4 @@
 """Hypothesis property tests on system invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,12 +7,10 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.compression import (
-    compressed_update, init_error_feedback, topk_compress)
+from repro.core.compression import topk_compress
 from repro.core.distributed import svrg_direction
 from repro.kernels.svrg_update.ref import svrg_update_ref
-from repro.utils.tree import (
-    tree_add, tree_axpy, tree_dot, tree_l2norm, tree_scale, tree_sub)
+from repro.utils.tree import tree_axpy, tree_l2norm
 
 floats = st.floats(-10, 10, allow_nan=False, allow_subnormal=False, width=32)
 arrays = st.lists(floats, min_size=1, max_size=32).map(

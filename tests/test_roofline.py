@@ -1,8 +1,7 @@
 """Roofline extraction: HLO collective parsing + analytic FLOPs accounting."""
 import numpy as np
-import pytest
 
-from repro.config import SHAPE_GRID, TPU_V5E
+from repro.config import SHAPE_GRID
 from repro.configs import get_config
 from repro.launch.roofline import (
     attention_flops, count_params, model_flops, parse_collective_bytes,

@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import ShapeConfig
 from repro.configs import reduced_config
 from repro.models.factory import build_model
 from repro.serve.loop import ServeSession, generate

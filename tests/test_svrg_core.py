@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.config import SVRGConfig
-from repro.core import LogisticRegression, run_asysvrg, run_svrg
+from repro.core import LogisticRegression, run_asysvrg
 from repro.core.asysvrg import asysvrg_epoch, parallel_full_grad
 from repro.core.svrg import svrg_epoch
 from repro.data.libsvm import make_synthetic_libsvm

@@ -12,7 +12,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import SVRGConfig
 from repro.core import (LogisticRegression, SweepSpec, make_grid,
                         run_asysvrg, run_sweep)
 from repro.core.asysvrg import (

@@ -1,0 +1,183 @@
+"""Multi-algorithm sweep: Hogwild!/SVRG rows vs their sequential drivers.
+
+(a) sweep-Hogwild! histories and final iterates are BIT-IDENTICAL to
+    sequential `run_hogwild` for all three reading schemes at τ ∈ {0, p−1};
+(b) the γ ← decay·γ schedule threaded through the compiled epochs-scan
+    equals an explicit per-epoch `hogwild_epoch` loop with externally
+    decayed γ;
+(c) `algo="svrg"` routes through the zero-delay degenerate path of the
+    AsySVRG engine (bit-identical to `run_asysvrg` at τ=0, p=1);
+(d) `run_hogwild.total_updates` derives from the same (n // p)·p total the
+    epoch scan executes; plus a frontier-grid smoke test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SVRGConfig
+from repro.core import (LogisticRegression, SweepSpec, run_asysvrg,
+                        run_hogwild, run_sweep, svrg_sweep_spec)
+from repro.core.hogwild import _resolve_hogwild_steps, hogwild_epoch
+from repro.core.objective import loss_fixed_order
+from repro.data.libsvm import make_synthetic_libsvm
+
+SCHEMES = ("consistent", "inconsistent", "unlock")
+
+
+@pytest.fixture(scope="module")
+def obj():
+    ds = make_synthetic_libsvm("real-sim", seed=11, scale=0.002)
+    return LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+
+
+def _assert_hogwild_rows_match_sequential(obj, specs, res, epochs):
+    for c, spec in enumerate(specs):
+        seq = run_hogwild(obj, epochs, spec.step_size,
+                          num_threads=spec.num_threads, decay=spec.decay,
+                          scheme=spec.scheme, tau=spec.tau, seed=spec.seed,
+                          delay_kind=spec.delay_kind)
+        np.testing.assert_array_equal(
+            np.asarray(seq.history, np.float32), res.histories[c],
+            err_msg=f"history mismatch for {spec}")
+        np.testing.assert_array_equal(
+            np.asarray(seq.w, np.float32), res.final_w[c],
+            err_msg=f"final iterate mismatch for {spec}")
+        assert int(res.total_updates[c]) == seq.total_updates
+        np.testing.assert_allclose(res.effective_passes[c],
+                                   np.asarray(seq.effective_passes))
+
+
+@pytest.mark.parametrize("tau", [0, 3])   # 3 = p − 1
+def test_sweep_hogwild_bit_identical_all_schemes(obj, tau):
+    """Acceptance: sweep-Hogwild! == sequential run_hogwild, bit-for-bit,
+    for every reading scheme at zero and maximal bounded delay."""
+    epochs, p = 3, 4
+    specs = [SweepSpec(algo="hogwild", scheme=s, step_size=0.5, tau=tau,
+                       num_threads=p, seed=seed)
+             for s in SCHEMES for seed in (0, 1)]
+    res = run_sweep(obj, epochs, specs)
+    assert res.histories.shape == (6, epochs + 1)
+    _assert_hogwild_rows_match_sequential(obj, specs, res, epochs)
+
+
+def test_sweep_hogwild_decay_axis_in_one_group(obj):
+    """Configs differing ONLY in decay batch into one group (decay is a
+    dynamic input, not a compile-time constant) and still match."""
+    epochs = 3
+    specs = [SweepSpec(algo="hogwild", scheme="unlock", step_size=0.5,
+                       tau=2, num_threads=3, seed=0, decay=d)
+             for d in (0.9, 0.5, 1.0)]
+    res = run_sweep(obj, epochs, specs)
+    _assert_hogwild_rows_match_sequential(obj, specs, res, epochs)
+    # sanity: decay actually changed the trajectories
+    assert not np.array_equal(res.final_w[0], res.final_w[1])
+
+
+def test_hogwild_decay_in_scan_matches_per_epoch_loop(obj):
+    """The γ←0.9γ schedule inside the compiled epochs-scan == an explicit
+    Python loop over `hogwild_epoch` with externally decayed f32 γ."""
+    epochs, p, tau = 4, 4, 3
+    step, decay = 0.5, 0.9
+    res = run_hogwild(obj, epochs, step, num_threads=p, decay=decay,
+                      scheme="inconsistent", tau=tau, seed=7)
+
+    epoch_fn = jax.jit(lambda w, k, g: hogwild_epoch(
+        obj, w, k, g, p, tau=tau, scheme="inconsistent"))
+    loss_fn = jax.jit(lambda w: loss_fixed_order(obj.X, obj.y, obj.l2, w))
+
+    w = jnp.zeros(obj.p)
+    key = jax.random.PRNGKey(7)
+    gamma = jnp.float32(step)
+    history = [float(loss_fn(w))]
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        w = epoch_fn(w, sub, gamma)
+        gamma = gamma * jnp.float32(decay)   # the externally-decayed γ chain
+        history.append(float(loss_fn(w)))
+
+    np.testing.assert_array_equal(np.asarray(res.history, np.float32),
+                                  np.asarray(history, np.float32))
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(w))
+
+
+def test_run_hogwild_total_updates_derives_from_epoch_total(obj):
+    """total_updates == epochs · (n // p)·p — the same expression the epoch
+    scan executes, including when p does not divide n."""
+    for p in (3, 7, 8):
+        _, total, _ = _resolve_hogwild_steps(obj.n, p, -1)
+        assert total == (obj.n // p) * p
+        res = run_hogwild(obj, 2, 0.5, num_threads=p, seed=0)
+        assert res.total_updates == 2 * total
+
+
+def test_svrg_algo_routes_through_zero_delay_path(obj):
+    """algo="svrg" == run_asysvrg at τ=0, p=1 (the degenerate case), from
+    the same vmapped engine, bit-for-bit."""
+    epochs = 2
+    spec = svrg_sweep_spec(step_size=1.0, num_inner=60, seed=5)
+    res = run_sweep(obj, epochs, [spec])
+    ref = run_asysvrg(obj, epochs,
+                      SVRGConfig(scheme="consistent", step_size=1.0,
+                                 num_threads=1, tau=0, inner_steps=60),
+                      seed=5)
+    np.testing.assert_array_equal(np.asarray(ref.history, np.float32),
+                                  res.histories[0])
+    np.testing.assert_array_equal(np.asarray(ref.w, np.float32),
+                                  res.final_w[0])
+
+
+def test_mixed_algo_grid_single_call(obj):
+    """asysvrg + hogwild + svrg specs in ONE run_sweep call land in their
+    engine groups and each row matches its own sequential driver."""
+    epochs = 2
+    asy = SweepSpec(scheme="inconsistent", step_size=0.5, tau=2,
+                    num_threads=3, inner_steps=20, seed=1)
+    hog = SweepSpec(algo="hogwild", scheme="unlock", step_size=0.5, tau=2,
+                    num_threads=3, seed=2)
+    svrg = svrg_sweep_spec(step_size=0.5, num_inner=30, seed=3)
+    res = run_sweep(obj, epochs, [asy, hog, svrg])
+
+    ref_a = run_asysvrg(obj, epochs, asy.to_config(), seed=1)
+    np.testing.assert_array_equal(np.asarray(ref_a.history, np.float32),
+                                  res.histories[0])
+    ref_h = run_hogwild(obj, epochs, 0.5, num_threads=3, scheme="unlock",
+                        tau=2, seed=2)
+    np.testing.assert_array_equal(np.asarray(ref_h.history, np.float32),
+                                  res.histories[1])
+    ref_s = run_asysvrg(obj, epochs,
+                        SVRGConfig(scheme="consistent", step_size=0.5,
+                                   num_threads=1, tau=0, inner_steps=30),
+                        seed=3)
+    np.testing.assert_array_equal(np.asarray(ref_s.history, np.float32),
+                                  res.histories[2])
+
+
+def test_sweep_rejects_bad_algo(obj):
+    with pytest.raises(ValueError):
+        run_sweep(obj, 1, [SweepSpec(algo="nope")])
+
+
+def test_frontier_grid_smoke(obj):
+    """frontier_stability's one-call grid: shape, verdicts, and a sane
+    frontier (τ=0 admits at least as large a step as the largest τ)."""
+    from benchmarks.frontier_stability import run as frontier_run
+    out = frontier_run(scale=0.002, steps=(0.5, 8.0), taus=(0, 3),
+                      epochs=2)
+    assert out["grid_size"] == 4
+    assert {c["verdict"] for c in out["cells"]} <= {"stable", "diverged"}
+    assert set(out["frontier"]) == {0, 3}
+    assert out["frontier"][0] >= out["frontier"][3]
+
+
+@pytest.mark.slow
+def test_sweep_hogwild_bit_identical_heavy_grid(obj):
+    """Heavy grid: schemes × seeds × steps × decays × delay kinds."""
+    epochs = 3
+    specs = [SweepSpec(algo="hogwild", scheme=s, step_size=step, tau=3,
+                       num_threads=4, seed=seed, decay=d, delay_kind=kind)
+             for s in SCHEMES for seed in (0, 1) for step in (0.25, 1.0)
+             for d in (0.9, 1.0) for kind in ("fixed", "uniform")]
+    res = run_sweep(obj, epochs, specs)
+    assert res.histories.shape == (48, epochs + 1)
+    _assert_hogwild_rows_match_sequential(obj, specs, res, epochs)

@@ -4,8 +4,6 @@
   2. AsySVRG beats Hogwild! per effective pass (Fig. 1 right).
   3. All three reading schemes reach the 1e-4 gap (Table 2 rows exist).
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -9,8 +9,7 @@ from repro.configs import reduced_config
 from repro.data.synthetic_lm import SyntheticLMDataset
 from repro.models.factory import build_model
 from repro.train.loop import train
-from repro.train.state import (
-    init_train_state, make_snapshot_fns, make_train_step)
+from repro.train.state import init_train_state, make_snapshot_fns
 
 
 @pytest.fixture(scope="module")
