@@ -3,25 +3,37 @@
 Theorem 1 ties the admissible step size to the staleness bound τ: more
 staleness shrinks the stable step region. This benchmark maps that frontier
 empirically: a grid over step sizes × τ values runs as a single
-`run_sweep` (one jit per M̃-group), each cell is classified
-stable / diverged from its loss history, and the report gives, per τ, the
-largest step that still converges.
+`run_sweep`, each cell is classified stable / diverged from its loss
+history, and the report gives, per τ, the largest step that still
+converges.
 
-The τ=0 column is serial SVRG routed through the same engine
-(``SweepSpec(algo="svrg")`` — the zero-delay degenerate case), so the
-frontier's sequential edge and its asynchronous interior share the compiled
-path and the comparison is apples-to-apples.
+Three engine features converge here:
+
+  * the τ=0 column is serial SVRG routed through the same engine
+    (``SweepSpec(algo="svrg")`` — the zero-delay degenerate case);
+  * a pass-matched Hogwild! edge rides in the SAME call: its rows carry a
+    3× per-row ``epochs`` budget (1 pass/epoch vs AsySVRG's ~3), which
+    before the masked-epoch axis forced a second `run_sweep` call;
+  * ``--sharded`` shards the config rows of every group across the host's
+    devices (`make_sweep_mesh` / shard_map) — the paper-scale path, bit-
+    identical per row to the single-device run on XLA:CPU.
+
+buf_len is pinned per row (τ, thread count), so the whole asysvrg τ axis
+at P threads is ONE compiled group; the svrg and hogwild rows get their
+own groups.
 """
 from __future__ import annotations
 
 import sys
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.artifacts import write_bench_json
 from repro.core import LogisticRegression, SweepSpec, run_sweep
 from repro.data.libsvm import make_synthetic_libsvm
+from repro.launch.mesh import make_sweep_mesh
 
 P = 10
 STEPS = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0)
@@ -37,7 +49,8 @@ def classify(history, f0: float) -> str:
 
 
 def run(dataset: str = "rcv1", scale: float = 0.03,
-        steps=STEPS, taus=TAUS, epochs: int = 6, quick: bool = False):
+        steps=STEPS, taus=TAUS, epochs: int = 6, quick: bool = False,
+        sharded: bool = False):
     if quick:
         steps = tuple(steps)[1::2]
         taus = tuple(taus)[::2]
@@ -55,40 +68,64 @@ def run(dataset: str = "rcv1", scale: float = 0.03,
             else:
                 specs.append(SweepSpec(scheme="inconsistent", step_size=step,
                                        tau=tau, num_threads=P))
+    n_async = len(specs)
+    # pass-matched Hogwild! edge: same (τ>0 × step) grid, 3× epoch budget
+    # (1 pass/epoch), in the SAME call via the per-row epochs axis
+    for tau in taus:
+        if tau == 0:
+            continue
+        for step in steps:
+            specs.append(SweepSpec(algo="hogwild", scheme="inconsistent",
+                                   step_size=step, tau=tau, num_threads=P,
+                                   epochs=3 * epochs))
+
+    mesh = make_sweep_mesh() if sharded and jax.device_count() > 1 else None
     t0 = time.perf_counter()
-    res = run_sweep(obj, epochs, specs)
+    res = run_sweep(obj, epochs, specs, mesh=mesh)
     sweep_s = time.perf_counter() - t0
 
     cells = []
-    for c, spec in enumerate(specs):
-        h = res.histories[c]
+    for c, spec in enumerate(res.specs):
+        _, h = res.curve(c)
         verdict = classify(h, f0)
         final = float(h[-1])
         cells.append({"tau": spec.tau if spec.algo != "svrg" else 0,
                       "algo": spec.algo, "step": spec.step_size,
+                      "epochs": int(res.epochs_per_row[c]),
                       "final_loss": final if np.isfinite(final) else None,
                       "verdict": verdict})
 
-    frontier = {}
-    for tau in taus:
-        stable = [c["step"] for c in cells
-                  if c["tau"] == tau and c["verdict"] == "stable"]
-        frontier[tau] = max(stable) if stable else 0.0
+    def _frontier(rows, over):
+        out = {}
+        for tau in over:
+            stable = [c["step"] for c in rows
+                      if c["tau"] == tau and c["verdict"] == "stable"]
+            out[tau] = max(stable) if stable else 0.0
+        return out
+
+    frontier = _frontier(cells[:n_async], taus)
+    frontier_hogwild = _frontier(cells[n_async:],
+                                 [t for t in taus if t != 0])
 
     return {"dataset": dataset, "f0": f0, "epochs": epochs,
             "grid_size": len(specs), "sweep_s": sweep_s,
-            "cells": cells, "frontier": frontier}
+            "devices": jax.device_count() if mesh is not None else 1,
+            "cells": cells, "frontier": frontier,
+            "frontier_hogwild": frontier_hogwild}
 
 
-def main(quick: bool = True):
-    out = run(quick=quick)
+def main(quick: bool = True, sharded: bool = False):
+    out = run(quick=quick, sharded=sharded)
     write_bench_json("frontier_stability", out)
     print("name,us_per_call,derived")
     print(f"frontier_sweep_engine,{out['sweep_s'] * 1e6:.1f},"
-          f"cells={out['grid_size']};one_call_grid")
+          f"cells={out['grid_size']};one_call_grid;"
+          f"devices={out['devices']}")
     for tau, step in out["frontier"].items():
         print(f"frontier_tau{tau},0,max_stable_step={step}")
+    for tau, step in out["frontier_hogwild"].items():
+        print(f"frontier_hogwild_tau{tau},0,max_stable_step={step}")
 
 
 if __name__ == "__main__":
-    main(quick="--quick" in sys.argv)
+    main(quick="--quick" in sys.argv, sharded="--sharded" in sys.argv)

@@ -10,7 +10,9 @@ from repro.core.sweep import (
     ALGOS,
     SweepSpec,
     SweepResult,
+    SweepPlan,
     make_grid,
+    plan_sweep,
     run_sweep,
 )
 from repro.core.hogwild import hogwild_epoch, run_hogwild
@@ -34,7 +36,9 @@ __all__ = [
     "make_delay_schedule",
     "SweepSpec",
     "SweepResult",
+    "SweepPlan",
     "make_grid",
+    "plan_sweep",
     "run_sweep",
     "hogwild_epoch",
     "run_hogwild",

@@ -15,8 +15,12 @@ Three pieces:
    each worker on the `data` axis runs H local SVRG steps on its OWN replica
    (replica divergence carries the paper's coordinate-age mixing, Eq. 10),
    then replicas reconcile by averaging (Option 2) — optionally through a
-   compressed collective (core.compression). H is the staleness bound τ;
-   H=1 is synchronous minibatch SVRG (the τ=0 degenerate case).
+   compressed collective (core.compression) whose per-worker
+   ``ErrorFeedbackState`` is threaded IN AND OUT of the epoch, so the
+   compression residual accumulates across epochs (Stich-style EF; a
+   residual recreated per epoch would silently discard it). H is the
+   staleness bound τ; H=1 is synchronous minibatch SVRG (the τ=0
+   degenerate case).
 """
 from __future__ import annotations
 
@@ -28,7 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.config import SVRGConfig
-from repro.core.compression import compressed_update, init_error_feedback
+from repro.core.compression import ErrorFeedbackState, compressed_update
 from repro.utils.tree import tree_add, tree_scale, tree_sub, tree_zeros_like
 
 
@@ -119,6 +123,13 @@ def snapshot_finalize(params, svrg_state: SVRGState, step) -> SVRGState:
 # Bounded-staleness local SVRG (shard_map over the data axis)
 # ---------------------------------------------------------------------------
 
+def init_worker_error_feedback(params, num_workers: int) -> ErrorFeedbackState:
+    """Per-worker EF residuals: params-shaped zeros with a leading [W] axis
+    (worker w's residual lives at index w, sharded over the `data` axis)."""
+    return ErrorFeedbackState(jax.tree.map(
+        lambda x: jnp.zeros((num_workers,) + x.shape, x.dtype), params))
+
+
 def bounded_staleness_epoch(
     mesh: Mesh,
     loss_fn: Callable,                # loss_fn(params, batch) scalar
@@ -128,6 +139,7 @@ def bounded_staleness_epoch(
     step_size: float,
     cfg: SVRGConfig,
     rng: Optional[jax.Array] = None,
+    ef: Optional[ErrorFeedbackState] = None,
 ):
     """H local SVRG steps per worker, then (optionally compressed) reconcile.
 
@@ -135,6 +147,13 @@ def bounded_staleness_epoch(
     its own shard, updating a private replica — between reconciles, replica
     coordinates mix updates of different ages exactly as the paper's
     inconsistent/unlock reads do. The closing pmean is Option 2 averaging.
+
+    Returns ``(new_params, new_ef)``. ``ef`` is each worker's PERSISTENT
+    error-feedback state ([W]-leading residual tree; None = zeros, i.e. a
+    fresh run): the compressor transmits compress(delta + residual) and the
+    untransmitted remainder is carried to the NEXT epoch — pass the
+    returned state back in. Recreating it every epoch would throw the
+    residual away and forfeit the EF convergence guarantee.
     """
     grad_fn = jax.grad(loss_fn)
     w_snap, g_snap = svrg_state.w_snap, svrg_state.g_snap
@@ -142,11 +161,15 @@ def bounded_staleness_epoch(
     frac = cfg.compression_k
     if rng is None:
         rng = jax.random.PRNGKey(0)
+    num_workers = mesh.shape.get("data", 1)
+    if ef is None:
+        ef = init_worker_error_feedback(params, num_workers)
 
-    def worker(params_rep, w_snap_rep, g_snap_rep, batches, key):
+    def worker(params_rep, w_snap_rep, g_snap_rep, batches, key, residual):
         # shard_map delivers [1, H, local_batch, ...]; drop the worker dim.
         batches = jax.tree.map(lambda x: x[0], batches)
         key = key[0]
+        residual = jax.tree.map(lambda x: x[0], residual)
 
         def body(w, b):
             g = grad_fn(w, b)
@@ -157,25 +180,29 @@ def bounded_staleness_epoch(
 
         w_local, _ = jax.lax.scan(body, params_rep, batches)
         # reconcile: average replicas (Option 2). With compression, transmit
-        # only the compressed delta and re-add to the common base point.
+        # only the compressed delta and re-add to the common base point; the
+        # compression error joins this worker's carried residual.
         delta = tree_sub(w_local, params_rep)
+        ef_local = ErrorFeedbackState(residual)
         if method != "none":
-            ef = init_error_feedback(delta)   # per-epoch EF (residual folded locally)
-            delta, ef = compressed_update(delta, ef, method, frac, key)
+            delta, ef_local = compressed_update(delta, ef_local, method,
+                                                frac, key)
         delta_mean = jax.lax.pmean(delta, "data")
-        return tree_add(params_rep, delta_mean)
+        new_residual = jax.tree.map(lambda x: x[None], ef_local.residual)
+        return tree_add(params_rep, delta_mean), new_residual
 
-    num_workers = mesh.shape.get("data", 1)
     keys = jax.random.split(rng, max(2, num_workers))[:num_workers]
 
     fn = shard_map(
         worker,
         mesh=mesh,
-        in_specs=(P(), P(), P(), P("data"), P("data")),
-        out_specs=P(),
+        in_specs=(P(), P(), P(), P("data"), P("data"), P("data")),
+        out_specs=(P(), P("data")),
         check_rep=False,
     )
-    return fn(params, w_snap, g_snap, local_batches, keys)
+    new_params, new_residual = fn(params, w_snap, g_snap, local_batches,
+                                  keys, ef.residual)
+    return new_params, ErrorFeedbackState(new_residual)
 
 
 def reshape_for_workers(batches, num_workers: int, local_steps: int):

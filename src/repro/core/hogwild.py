@@ -89,27 +89,39 @@ def _hogwild_epoch_core(X, y, l2: float, w, key, gamma, tau, scheme_id,
 
 def _hogwild_epochs_core(X, y, l2: float, w0, key, gamma0, decay, tau,
                          scheme_id, delay_id, *, epochs: int, total: int,
-                         buf_len: int, drop_prob: float):
+                         buf_len: int, drop_prob: float, row_epochs=None):
     """`epochs` Hogwild! epochs as one `lax.scan`, γ ← decay·γ in the carry.
 
     Returns (w_final, losses[epochs+1]) with the fixed-order loss recorded
     after every epoch (index 0 = loss at w0) — the decay schedule and the
     history both live INSIDE the compiled program, so a vmap over configs
     batches them too.
+
+    ``row_epochs`` (a dynamic, batchable scalar; default = the static
+    ``epochs`` bound) is this config's own epoch budget: once the epoch
+    index reaches it the row FREEZES — carry passthrough (w, γ) and masked
+    loss writes (the last live loss is re-emitted) — so a sweep row with a
+    shorter budget is bit-identical to an independent shorter run while
+    scanning to the group's shared static bound.
     """
     loss0 = loss_fixed_order(X, y, l2, w0)
+    bound = jnp.int32(epochs) if row_epochs is None else row_epochs
 
-    def step(carry, _):
-        w, key, gamma = carry
+    def step(carry, e):
+        w, key, gamma, loss_prev = carry
         key, sub = jax.random.split(key)
-        w_next = _hogwild_epoch_core(
+        active = e < bound
+        w_new = _hogwild_epoch_core(
             X, y, l2, w, sub, gamma, tau, scheme_id, delay_id,
             total=total, buf_len=buf_len, drop_prob=drop_prob)
-        return ((w_next, key, gamma * decay),
-                loss_fixed_order(X, y, l2, w_next))
+        w_next = jnp.where(active, w_new, w)
+        gamma_next = jnp.where(active, gamma * decay, gamma)
+        loss_next = jnp.where(active, loss_fixed_order(X, y, l2, w_next),
+                              loss_prev)
+        return (w_next, key, gamma_next, loss_next), loss_next
 
-    (w_fin, _, _), losses = jax.lax.scan(
-        step, (w0, key, gamma0), None, length=epochs)
+    (w_fin, _, _, _), losses = jax.lax.scan(
+        step, (w0, key, gamma0, loss0), jnp.arange(epochs))
     return w_fin, jnp.concatenate([loss0[None], losses])
 
 

@@ -8,9 +8,13 @@ case, used (a) as the single-thread baseline for the speedup metric and
 
 For grid runs, serial SVRG is routed through the SAME compiled path as the
 delay engine: `repro.core.sweep` maps ``SweepSpec(algo="svrg")`` onto
-`asysvrg._epoch_core` with τ=0 / zero delays / consistent reads, so SVRG
-rows share the vmapped jit with AsySVRG rows of equal M̃ and option.
-`sweep_spec` below builds that spec from `run_svrg`'s arguments.
+`asysvrg._epoch_core` with τ=0 / zero delays / consistent reads (specs are
+normalized so the result reports exactly that), and SVRG rows share the
+vmapped jit with AsySVRG rows of equal (M̃, option, buf_len) — buf_len is
+pinned per row from (τ, num_threads), so give the svrg row the grid's
+thread count to co-batch it, or leave ``num_threads=1`` for a lean
+buf_len-1 group of its own. `sweep_spec` below builds the spec from
+`run_svrg`'s arguments.
 """
 from __future__ import annotations
 

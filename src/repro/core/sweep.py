@@ -1,14 +1,37 @@
-"""Multi-algorithm sweep engine: the whole experiment grid in ONE jit.
+"""Multi-algorithm, device-sharded sweep engine: the experiment grid in ONE
+jit per group — per pod, not per host.
 
 The paper's tables and figures are *comparisons* — AsySVRG vs Hogwild! vs
 serial SVRG over (reading scheme × thread count × step size × seed × τ).
 The benchmark layer used to run each cell as its own `run_*` call — one
 trace, one compile, and epochs × Python dispatches PER CELL. This module
 turns the grid into data: every configuration becomes a row of scalar
-arrays (seed, algo, scheme-id, step-size, τ, delay-id, decay), the epoch
-body is `vmap`-ed over that row axis, and a `lax.scan` drives the epochs —
-so N×compile becomes 1×compile and the entire grid advances in lockstep
-through one XLA program.
+arrays (seed, algo, scheme-id, step-size, τ, delay-id, decay, epochs), the
+epoch body is `vmap`-ed over that row axis, and a `lax.scan` drives the
+epochs — so N×compile becomes 1×compile and the entire grid advances in
+lockstep through one XLA program.
+
+Two axes make the engine paper-scale:
+
+**Config-batch sharding.** When a mesh with a ``data`` axis is active —
+passed as ``run_sweep(..., mesh=...)`` or installed ambiently via
+``repro.sharding.context.mesh_context`` (the launcher's mesh, see
+`repro.launch.mesh.make_sweep_mesh` / `make_production_mesh`) — each
+group's row axis is padded to a multiple of the ``data``-axis size and
+dispatched through ``shard_map``: every device runs the identical vmapped
+program over its row shard, with NO cross-row collectives, so an N-config
+grid is one jit per group per *pod* instead of per host. Padding rows
+replicate row 0 and are dropped on reassembly. Without a mesh (or with a
+1-device ``data`` axis) the unsharded single-device path runs unchanged.
+
+**Masked per-row epochs.** ``SweepSpec.epochs`` (0 = inherit `run_sweep`'s
+``epochs`` argument) lets rows of ONE call run different epoch budgets: the
+group scans to its members' max and finished rows are frozen — the carry
+passes through unchanged and the loss write is masked (the last live loss
+is carried forward), so a row with ``epochs=E`` is bit-identical to an
+independent E-epoch run. This is what folds Fig. 1's paired budgets
+(AsySVRG E vs Hogwild! 3E, equal effective passes) into a single
+`run_sweep` call.
 
 The `algo` axis selects the epoch engine per row:
 
@@ -21,31 +44,42 @@ The `algo` axis selects the epoch engine per row:
   * ``"svrg"``    — serial SVRG routed through the SAME asysvrg path as the
     zero-delay degenerate case (τ=0, zero delay schedule, consistent reads
     — "If τ=0, AsySVRG degenerates to the sequential version of SVRG").
-    SVRG rows therefore ride in the same vmapped batch (same jit) as
-    asysvrg rows whenever their M̃ and option agree.
+    svrg specs are NORMALIZED on entry: contradictory ``tau != 0`` raises,
+    and ``scheme``/``delay_kind`` are rewritten to the values that execute,
+    so `SweepResult.row()` never reports a scheme that never ran.
 
 Bit-exactness contract: per-config loss histories and final iterates are
 BIT-IDENTICAL to sequential `run_asysvrg` / `run_hogwild` calls with the
-same specs (tests/test_sweep.py, tests/test_sweep_hogwild.py). This is what
-makes the sweep a drop-in replacement for the benchmark loops rather than a
-statistical approximation of them. The contract holds because both epoch
-cores and `loss_fixed_order` only use reductions whose bits survive vmap
-batching (see repro.core.objective).
+same specs (tests/test_sweep.py, tests/test_sweep_hogwild.py), and the
+sharded dispatch is bit-identical per row to the unsharded path
+(tests/test_sweep_sharded.py, under forced multi-device CPU). The contract
+holds because both epoch cores and `loss_fixed_order` only use reductions
+whose bits survive vmap batching (see repro.core.objective) — and because
+each row's arithmetic is device-local under `shard_map` (no cross-row
+collectives). It is CALIBRATED AGAINST XLA:CPU reduction behaviour and must
+be re-validated per backend before the sharded path is trusted on TPU/GPU.
 
-Configurations may disagree on M̃ (a static scan bound): `run_sweep` groups
-specs by (engine, M̃, option), compiles once per group, and reassembles rows
-in input order. A grid over schemes / seeds / steps / τ / delay-kinds is
-one group per algo; adding thread counts usually stays at one group too,
-since M = ⌊2n/p⌋ keeps pM ≈ 2n (e.g. any p dividing 2n).
+Grouping: specs are grouped by the STATIC dims of their compiled program —
+(engine, M̃, option, buf_len) — compiled once per group, and rows reassemble
+in input order. ``buf_len`` (the delay ring-buffer length) is pinned PER
+ROW at resolve time from the row's own (τ, num_threads): adding an
+unrelated high-τ row to a sweep can therefore never change another row's
+compiled program shape (it lands in its own group). Rows that should share
+a group share a thread count, which the paper's grids do; the ring-buffer
+slot arithmetic uses the dynamic τ, so buf_len only affects shapes, never
+bits. A grid over schemes / seeds / steps / τ / delay-kinds / epochs at one
+thread count is one group per algo.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
 from repro.config import SVRGConfig
 from repro.core.asysvrg import (
@@ -56,11 +90,13 @@ from repro.core.asysvrg import (
 )
 from repro.core.hogwild import _hogwild_epochs_core, _resolve_hogwild_steps
 from repro.core.objective import LogisticRegression, loss_fixed_order
+from repro.sharding.context import current_mesh
 
 ALGOS = ("asysvrg", "hogwild", "svrg")
 # svrg rows run on the asysvrg engine (τ=0 degenerate case), so two engines
 _ENGINE_ASYSVRG = "asysvrg"
 _ENGINE_HOGWILD = "hogwild"
+_DATA_AXIS = "data"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,9 +109,12 @@ class SweepSpec:
         ``num_threads``/``inner_steps`` fix M̃ = pM exactly as SVRGConfig.
       * hogwild: ``tau=-1`` derives τ = p−1 and ``tau=0`` is genuinely zero
         delay (`run_hogwild` convention); M̃ = (n // p)·p.
-      * svrg: τ forced to 0 and reads forced consistent — the degenerate
-        case; M̃ = ``inner_steps`` or 2n (`run_svrg` convention).
+      * svrg: τ MUST be 0 (anything else raises — svrg is the zero-delay
+        degenerate case) and reads execute consistent with zero delays;
+        M̃ = ``inner_steps`` or 2n (`run_svrg` convention).
     ``decay`` is the per-epoch γ ← decay·γ factor (hogwild only).
+    ``epochs`` is this row's outer-epoch budget; 0 inherits `run_sweep`'s
+    ``epochs`` argument. Rows of one call may disagree (masked epochs).
     """
     seed: int = 0
     scheme: str = "inconsistent"
@@ -87,6 +126,7 @@ class SweepSpec:
     option: int = 2
     algo: str = "asysvrg"
     decay: float = 0.9
+    epochs: int = 0
 
     def to_config(self) -> SVRGConfig:
         return SVRGConfig(scheme=self.scheme, step_size=self.step_size,
@@ -95,18 +135,33 @@ class SweepSpec:
 
 
 class SweepResult(NamedTuple):
+    """Row-aligned sweep outputs.
+
+    ``specs`` are the NORMALIZED specs describing what executed (derived τ
+    substituted, svrg scheme/delay rewritten, per-row epochs made explicit).
+    ``histories``/``effective_passes`` have the GLOBAL max-epochs width;
+    rows with a shorter budget are frozen past their own epoch count — use
+    :meth:`curve` for a row trimmed to its own budget.
+    """
     specs: Tuple[SweepSpec, ...]
-    histories: np.ndarray         # [C, epochs+1] loss after each epoch
-    effective_passes: np.ndarray  # [C, epochs+1] cumulative effective passes
+    histories: np.ndarray         # [C, max_epochs+1] loss after each epoch
+    effective_passes: np.ndarray  # [C, max_epochs+1] cumulative eff. passes
     final_w: np.ndarray           # [C, p]
-    total_updates: np.ndarray     # [C] updates applied over all epochs
+    total_updates: np.ndarray     # [C] updates applied over all row epochs
+    epochs_per_row: np.ndarray    # [C] each row's executed epoch budget
+
+    def curve(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(effective_passes, loss history) trimmed to row c's own budget."""
+        e = int(self.epochs_per_row[c])
+        return self.effective_passes[c, :e + 1], self.histories[c, :e + 1]
 
     def row(self, c: int) -> Dict:
         """One config as a flat record (for CSV-ish reporting)."""
         s = self.specs[c]
+        passes, hist = self.curve(c)
         return {**dataclasses.asdict(s),
-                "history": self.histories[c],
-                "effective_passes": self.effective_passes[c],
+                "history": hist,
+                "effective_passes": passes,
                 "total_updates": int(self.total_updates[c])}
 
 
@@ -119,7 +174,8 @@ def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
               inner_steps: int = 0,
               option: int = 2,
               algo: str = "asysvrg",
-              decay: float = 0.9) -> List[SweepSpec]:
+              decay: float = 0.9,
+              epochs: int = 0) -> List[SweepSpec]:
     """Cartesian grid over the paper's experiment axes, outermost-first.
 
     The ``taus`` axis uses ONE convention for every algo: 0 means "derive
@@ -134,7 +190,7 @@ def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
         SweepSpec(seed=seed, scheme=scheme, step_size=step, tau=tau,
                   delay_kind=kind, num_threads=num_threads,
                   inner_steps=inner_steps, option=option, algo=algo,
-                  decay=decay)
+                  decay=decay, epochs=epochs)
         for scheme in schemes
         for seed in seeds
         for step in step_sizes
@@ -151,133 +207,290 @@ class _Resolved(NamedTuple):
     delay_id: int
     option: int          # 0 for hogwild (engine has no option switch)
     passes_per_epoch: float
+    buf_len: int         # ring-buffer length, pinned per-row (see _resolve)
+    epochs: int          # this row's outer-epoch budget
 
 
-def _resolve(obj: LogisticRegression, spec: SweepSpec) -> _Resolved:
-    """Per-spec resolution, delegating to each algorithm's own arithmetic."""
+def _row_buf_len(tau: int, num_threads: int, total: int) -> int:
+    """Ring-buffer length from the ROW's own fields (never the group's).
+
+    ≥ τ+1 (correctness) and padded up to the thread count so a grid varying
+    τ at one thread count still shares one compiled shape — while adding an
+    unrelated high-τ row cannot change this row's buffer (it gets its own
+    group). Dynamic-τ slot arithmetic makes any length ≥ τ+1 read
+    bit-identically (tests/test_sweep.py), so this only moves shapes.
+    """
+    return min(max(tau + 1, max(1, num_threads)), max(1, total))
+
+
+def _normalize_spec(spec: SweepSpec) -> SweepSpec:
+    """Entry normalization: reject contradictions, rewrite svrg to what runs.
+
+    svrg rows execute consistent reads with a zero delay schedule at τ=0 —
+    a spec recording anything else would make `SweepResult.row()` report a
+    scheme that never ran. τ≠0 on svrg is a contradiction (svrg IS the τ=0
+    degenerate case) and raises; scheme/delay_kind (dataclass defaults are
+    asysvrg-flavoured) are rewritten silently.
+    """
     if spec.algo not in ALGOS:
         raise ValueError(f"unknown algo {spec.algo!r}")
-    if spec.delay_kind not in DELAY_IDS:
-        raise ValueError(f"unknown delay schedule {spec.delay_kind!r}")
     if spec.scheme not in SCHEME_IDS:
         raise ValueError(f"unknown scheme {spec.scheme!r}")
+    if spec.delay_kind not in DELAY_IDS:
+        raise ValueError(f"unknown delay schedule {spec.delay_kind!r}")
+    if spec.epochs < 0:
+        raise ValueError(f"epochs must be >= 0 (0 = inherit), got {spec.epochs}")
+    if spec.algo == "svrg":
+        if spec.tau != 0:
+            raise ValueError(
+                f"algo='svrg' is the τ=0 degenerate case; tau={spec.tau} "
+                "contradicts it — use algo='asysvrg' for τ>0")
+        return dataclasses.replace(spec, scheme="consistent",
+                                   delay_kind="zero")
+    return spec
+
+
+def _resolve(obj: LogisticRegression, spec: SweepSpec,
+             default_epochs: int) -> _Resolved:
+    """Per-spec resolution, delegating to each algorithm's own arithmetic."""
+    epochs = spec.epochs or default_epochs
+    if epochs < 1:
+        raise ValueError(f"resolved epochs must be >= 1, got {epochs}")
 
     if spec.algo == "hogwild":
         _, total, tau = _resolve_hogwild_steps(obj.n, spec.num_threads,
                                                spec.tau)
         delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
         return _Resolved(_ENGINE_HOGWILD, total, tau,
-                         SCHEME_IDS[spec.scheme], delay_id, 0, 1.0)
+                         SCHEME_IDS[spec.scheme], delay_id, 0, 1.0,
+                         _row_buf_len(tau, spec.num_threads, total), epochs)
 
     if spec.algo == "svrg":
         # the zero-delay degenerate case on the asysvrg engine (paper §3)
         total = spec.inner_steps or 2 * obj.n
         return _Resolved(_ENGINE_ASYSVRG, total, 0,
                          SCHEME_IDS["consistent"], DELAY_IDS["zero"],
-                         spec.option, 1.0 + total / obj.n)
+                         spec.option, 1.0 + total / obj.n,
+                         _row_buf_len(0, spec.num_threads, total), epochs)
 
     _, _, total, tau = _resolve_steps(obj, spec.to_config())
     delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
     return _Resolved(_ENGINE_ASYSVRG, total, tau, SCHEME_IDS[spec.scheme],
-                     delay_id, spec.option, 1.0 + total / obj.n)
+                     delay_id, spec.option, 1.0 + total / obj.n,
+                     _row_buf_len(tau, spec.num_threads, total), epochs)
+
+
+def _executed_spec(spec: SweepSpec, r: _Resolved) -> SweepSpec:
+    """Rewrite convention sentinels to resolved values: the spec a
+    `SweepResult` carries describes exactly what executed (derived τ made
+    explicit, zero-delay collapse reflected, per-row epochs pinned)."""
+    delay = "zero" if r.delay_id == DELAY_IDS["zero"] else spec.delay_kind
+    return dataclasses.replace(spec, tau=r.tau, delay_kind=delay,
+                               epochs=r.epochs)
+
+
+_GroupKey = Tuple[str, int, int, int]     # (engine, M̃, option, buf_len)
+
+
+class SweepPlan(NamedTuple):
+    """Static execution plan: what compiles together, with which bounds."""
+    specs: Tuple[SweepSpec, ...]          # normalized, executed-semantics
+    resolved: Tuple[_Resolved, ...]
+    groups: Dict[_GroupKey, List[int]]    # group key -> member row indices
+
+    def group_epochs(self, key: _GroupKey) -> int:
+        """A group's static scan bound: max member epoch budget."""
+        return max(self.resolved[c].epochs for c in self.groups[key])
+
+
+def plan_sweep(obj: LogisticRegression, epochs: int,
+               specs: Sequence[SweepSpec]) -> SweepPlan:
+    """Normalize + resolve specs and group them by compiled-program shape.
+
+    Exposed for tests and capacity planning: the group keys are the static
+    dims (engine, M̃, option, buf_len), all pinned per-row, so a row's key
+    never depends on which other rows share the sweep.
+    """
+    specs = tuple(_normalize_spec(s) for s in specs)
+    if not specs:
+        raise ValueError("empty sweep")
+    resolved = tuple(_resolve(obj, s, epochs) for s in specs)
+    specs = tuple(_executed_spec(s, r) for s, r in zip(specs, resolved))
+    groups: Dict[_GroupKey, List[int]] = {}
+    for c, r in enumerate(resolved):
+        groups.setdefault((r.engine, r.total, r.option, r.buf_len),
+                          []).append(c)
+    return SweepPlan(specs=specs, resolved=resolved, groups=groups)
+
+
+def _active_mesh(mesh: Optional[Mesh]) -> Optional[Mesh]:
+    """The mesh whose `data` axis shards the config-row axis, if any.
+
+    Explicit ``mesh=`` wins; otherwise the ambient `mesh_context` mesh
+    (repro.sharding.context) is picked up, so a launcher that installed the
+    production mesh shards its sweeps with no call-site changes. A mesh
+    without a >1-sized ``data`` axis degrades to the unsharded path.
+    """
+    if mesh is None:
+        mesh = current_mesh()
+    if mesh is None or _DATA_AXIS not in mesh.axis_names:
+        return None
+    if int(mesh.shape[_DATA_AXIS]) <= 1:
+        return None
+    return mesh
+
+
+def _maybe_shard_rows(fn, mesh: Optional[Mesh], num_in: int):
+    """jit the vmapped group body, sharding the row axis over `data`.
+
+    Every input/output is row-leading, so in/out specs are all
+    ``P("data")`` — each device runs the identical program over its row
+    shard and NO collective crosses rows, which is why sharded rows stay
+    bit-identical to the unsharded path. (`check_rep=False`: mesh axes
+    other than `data` — e.g. `model` in the production mesh — replicate
+    the rows redundantly, which is deterministic and harmless.)
+    """
+    if mesh is None:
+        return jax.jit(fn)
+    spec = P(_DATA_AXIS)
+    return jax.jit(shard_map(fn, mesh=mesh,
+                             in_specs=(spec,) * num_in,
+                             out_specs=(spec, spec),
+                             check_rep=False))
+
+
+def _pad_rows(args: Tuple[jnp.ndarray, ...], pad: int):
+    """Pad each row-leading array by replicating row 0 (a valid config —
+    padding rows compute real, discarded work)."""
+    if pad == 0:
+        return args
+    return tuple(jnp.concatenate([a] + [a[:1]] * pad, axis=0) for a in args)
 
 
 def _asysvrg_group_runner(X, y, l2: float, epochs: int, total: int,
-                          buf_len: int, option: int, drop_prob: float):
-    """jit(vmap(per-config epochs-scan)) for one asysvrg/svrg group."""
+                          buf_len: int, option: int, drop_prob: float,
+                          mesh: Optional[Mesh]):
+    """jit(vmap(per-config masked epochs-scan)) for one asysvrg/svrg group,
+    row-sharded over the mesh `data` axis when one is active."""
 
-    def per_config(key, eta, tau, scheme_id, delay_id, w0):
+    def per_config(key, eta, tau, scheme_id, delay_id, row_epochs, w0):
         loss0 = loss_fixed_order(X, y, l2, w0)
 
-        def step(carry, _):
-            w, key = carry
+        def step(carry, e):
+            w, key, loss_prev = carry
             key, sub = jax.random.split(key)
-            w_next = _epoch_core(
+            active = e < row_epochs
+            w_new = _epoch_core(
                 X, y, l2, w, sub, eta, tau, scheme_id, delay_id,
                 total=total, buf_len=buf_len, option=option,
                 drop_prob=drop_prob)
-            return (w_next, key), loss_fixed_order(X, y, l2, w_next)
+            # frozen rows: carry passthrough + masked loss write (the last
+            # live loss is re-emitted), so a row with a shorter budget is
+            # bit-identical to an independent shorter run
+            w_next = jnp.where(active, w_new, w)
+            loss_next = jnp.where(active, loss_fixed_order(X, y, l2, w_next),
+                                  loss_prev)
+            return (w_next, key, loss_next), loss_next
 
-        (w_fin, _), losses = jax.lax.scan(step, (w0, key), None, length=epochs)
+        (w_fin, _, _), losses = jax.lax.scan(
+            step, (w0, key, loss0), jnp.arange(epochs))
         return w_fin, jnp.concatenate([loss0[None], losses])
 
-    return jax.jit(jax.vmap(per_config))
+    return _maybe_shard_rows(jax.vmap(per_config), mesh, num_in=7)
 
 
 def _hogwild_group_runner(X, y, l2: float, epochs: int, total: int,
-                          buf_len: int, drop_prob: float):
-    """jit(vmap(multi-epoch Hogwild! scan, γ-decay in the carry))."""
+                          buf_len: int, drop_prob: float,
+                          mesh: Optional[Mesh]):
+    """jit(vmap(multi-epoch Hogwild! scan, γ-decay in the carry)),
+    row-sharded over the mesh `data` axis when one is active."""
 
-    def per_config(key, gamma0, decay, tau, scheme_id, delay_id, w0):
+    def per_config(key, gamma0, decay, tau, scheme_id, delay_id, row_epochs,
+                   w0):
         return _hogwild_epochs_core(
             X, y, l2, w0, key, gamma0, decay, tau, scheme_id, delay_id,
             epochs=epochs, total=total, buf_len=buf_len,
-            drop_prob=drop_prob)
+            drop_prob=drop_prob, row_epochs=row_epochs)
 
-    return jax.jit(jax.vmap(per_config))
+    return _maybe_shard_rows(jax.vmap(per_config), mesh, num_in=8)
 
 
 def run_sweep(obj: LogisticRegression, epochs: int,
               specs: Sequence[SweepSpec], *, w0=None,
-              drop_prob: float = 0.02) -> SweepResult:
-    """Run every spec for `epochs` outer iterations in one compiled program
-    per (engine, M̃, option) group. Histories/final iterates are bit-identical
-    to per-spec `run_asysvrg` / `run_hogwild` calls."""
-    specs = tuple(specs)
-    if not specs:
-        raise ValueError("empty sweep")
+              drop_prob: float = 0.02,
+              mesh: Optional[Mesh] = None) -> SweepResult:
+    """Run every spec for its epoch budget in one compiled program per
+    (engine, M̃, option, buf_len) group, row-sharded across the mesh `data`
+    axis when one is active (explicit ``mesh=`` or the ambient
+    `repro.sharding.context` mesh). Histories/final iterates are
+    bit-identical to per-spec `run_asysvrg` / `run_hogwild` calls — sharded
+    or not (XLA:CPU-calibrated; re-validate per backend)."""
+    plan = plan_sweep(obj, epochs, specs)
+    specs, resolved = plan.specs, plan.resolved
     w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
-
-    resolved = [_resolve(obj, s) for s in specs]
-    groups: Dict[Tuple[str, int, int], List[int]] = {}
-    for c, r in enumerate(resolved):
-        groups.setdefault((r.engine, r.total, r.option), []).append(c)
+    mesh = _active_mesh(mesh)
 
     C = len(specs)
-    histories = np.zeros((C, epochs + 1), np.float32)
+    max_epochs = max(r.epochs for r in resolved)
+    histories = np.zeros((C, max_epochs + 1), np.float32)
     final_w = np.zeros((C, obj.p), np.float32)
-    passes = np.zeros((C, epochs + 1), np.float64)
+    passes = np.zeros((C, max_epochs + 1), np.float64)
     total_updates = np.zeros((C,), np.int64)
+    epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
 
-    for (engine, total, option), members in groups.items():
-        taus = [resolved[c].tau for c in members]
-        buf_len = max(taus) + 1
+    for key_, members in plan.groups.items():
+        engine, total, option, buf_len = key_
+        group_epochs = plan.group_epochs(key_)
         keys = jax.vmap(jax.random.PRNGKey)(
             jnp.asarray([specs[c].seed for c in members]))
         etas = jnp.asarray([specs[c].step_size for c in members],
                            jnp.float32)
-        taus_a = jnp.asarray(taus, jnp.int32)
+        taus_a = jnp.asarray([resolved[c].tau for c in members], jnp.int32)
         scheme_ids = jnp.asarray([resolved[c].scheme_id for c in members],
                                  jnp.int32)
         delay_ids = jnp.asarray([resolved[c].delay_id for c in members],
                                 jnp.int32)
+        row_epochs = jnp.asarray([resolved[c].epochs for c in members],
+                                 jnp.int32)
         w0_rows = jnp.tile(w_init[None, :], (len(members), 1))
 
         if engine == _ENGINE_HOGWILD:
-            runner = _hogwild_group_runner(obj.X, obj.y, obj.l2, epochs,
-                                           total, buf_len, drop_prob)
             decays = jnp.asarray([specs[c].decay for c in members],
                                  jnp.float32)
-            w_fin, hist = runner(keys, etas, decays, taus_a, scheme_ids,
-                                 delay_ids, w0_rows)
+            args = (keys, etas, decays, taus_a, scheme_ids, delay_ids,
+                    row_epochs, w0_rows)
+            runner = _hogwild_group_runner(obj.X, obj.y, obj.l2,
+                                           group_epochs, total, buf_len,
+                                           drop_prob, mesh)
         else:
-            runner = _asysvrg_group_runner(obj.X, obj.y, obj.l2, epochs,
-                                           total, buf_len, option, drop_prob)
-            w_fin, hist = runner(keys, etas, taus_a, scheme_ids, delay_ids,
-                                 w0_rows)
+            args = (keys, etas, taus_a, scheme_ids, delay_ids, row_epochs,
+                    w0_rows)
+            runner = _asysvrg_group_runner(obj.X, obj.y, obj.l2,
+                                           group_epochs, total, buf_len,
+                                           option, drop_prob, mesh)
 
-        hist = np.asarray(hist)
-        w_fin = np.asarray(w_fin)
+        if mesh is not None:
+            # pad the row axis to a multiple of the data-axis size; padded
+            # rows replicate row 0 and are sliced off below
+            args = _pad_rows(args, -len(members) % int(mesh.shape[_DATA_AXIS]))
+        w_fin, hist = runner(*args)
+
+        hist = np.asarray(hist)[:len(members)]
+        w_fin = np.asarray(w_fin)[:len(members)]
         for row, c in enumerate(members):
-            histories[c] = hist[row]
+            e_row = resolved[c].epochs
+            histories[c, :group_epochs + 1] = hist[row]
+            histories[c, group_epochs + 1:] = hist[row, -1]
             final_w[c] = w_fin[row]
             ppe = resolved[c].passes_per_epoch
             acc = [0.0]
-            for _ in range(epochs):        # same float accumulation order as
-                acc.append(acc[-1] + ppe)  # the sequential drivers' loops
+            for e in range(max_epochs):    # same float accumulation order as
+                nxt = acc[-1] + ppe        # the sequential drivers' loops,
+                acc.append(nxt if e < e_row else acc[-1])  # frozen past e_row
             passes[c] = acc
-            total_updates[c] = epochs * total
+            total_updates[c] = e_row * total
 
     return SweepResult(specs=specs, histories=histories,
                        effective_passes=passes, final_w=final_w,
-                       total_updates=total_updates)
+                       total_updates=total_updates,
+                       epochs_per_row=epochs_per_row)

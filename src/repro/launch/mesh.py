@@ -27,3 +27,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh with the production axis names (CPU smoke tests)."""
     return make_mesh((1, 1), ("data", "model"))
+
+
+def make_sweep_mesh(num_devices: int | None = None):
+    """1-D (`data`,) mesh over the host's devices, for config-row sharding.
+
+    `repro.core.sweep.run_sweep` shards each group's config-batch axis over
+    the `data` axis of whatever mesh it is given (or the ambient
+    `mesh_context` mesh); this factory builds the simplest such mesh — all
+    local devices on one axis. CI's forced-8-device CPU job and the sharded
+    bench smoke both use it; on real hardware pass `make_production_mesh()`
+    instead (same axis name, pod-scale device set).
+    """
+    import jax
+    n = num_devices or len(jax.devices())
+    return make_mesh((n,), ("data",))

@@ -5,6 +5,12 @@ rule table here before tracing, and models call :func:`constrain` with
 LOGICAL axis names. Outside a mesh context it is a no-op, so smoke tests on
 one CPU device run the identical code path.
 
+The sweep engine reuses the same ambient mesh: `repro.core.sweep.run_sweep`
+picks up :func:`current_mesh` (when no explicit ``mesh=`` is passed) and
+shards its config-row axis over the mesh's `data` axis — so a launcher that
+entered `mesh_context(make_production_mesh())` shards its grids with no
+call-site changes.
+
 Key constraints applied (see DESIGN.md §4 and EXPERIMENTS.md §Perf):
   * attention/moe/encdec/vlm residual stream: ("batch", "seq_shard", None)
     — sequence-parallel saved activations (fits 32k prefill / 4k train).

@@ -16,12 +16,14 @@ from repro.core.compression import (
 from repro.core.distributed import (
     bounded_staleness_epoch,
     init_svrg_state,
+    init_worker_error_feedback,
     reshape_for_workers,
     snapshot_accumulate,
     snapshot_begin,
     snapshot_finalize,
     svrg_direction,
 )
+from repro.utils.tree import tree_sub
 from repro.launch.mesh import make_host_mesh
 
 
@@ -47,8 +49,8 @@ def test_bounded_staleness_epoch_single_worker_equals_local_steps():
 
     cfg = SVRGConfig(local_steps=H)
     batches = reshape_for_workers(target, 1, H)       # [1, H, 2, dim]
-    out = bounded_staleness_epoch(mesh, _quad_loss, params, svrg, batches,
-                                  step_size=0.1, cfg=cfg)
+    out, _ = bounded_staleness_epoch(mesh, _quad_loss, params, svrg, batches,
+                                     step_size=0.1, cfg=cfg)
 
     # sequential reference
     w = params
@@ -78,8 +80,8 @@ def test_bounded_staleness_converges_on_quadratic():
             e)
         batches = reshape_for_workers(
             target.reshape(H, 8, dim), 1, H)
-        params = bounded_staleness_epoch(mesh, _quad_loss, params, svrg,
-                                         batches, step_size=0.3, cfg=cfg)
+        params, _ = bounded_staleness_epoch(mesh, _quad_loss, params, svrg,
+                                            batches, step_size=0.3, cfg=cfg)
     w_star = target.mean(0)
     np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(w_star),
                                atol=1e-2)
@@ -149,14 +151,85 @@ def test_compressed_reconcile_still_converges():
     target = jax.random.normal(key, (32, dim)) + 1.0
     params = {"w": jnp.zeros(dim)}
     cfg = SVRGConfig(local_steps=H, compression="topk", compression_k=0.5)
+    ef = None
     for e in range(12):
         svrg = snapshot_finalize(
             params, snapshot_accumulate(
                 _quad_loss, params,
                 snapshot_begin(init_svrg_state(params)), target), e)
         batches = reshape_for_workers(target.reshape(H, 8, dim), 1, H)
-        params = bounded_staleness_epoch(mesh, _quad_loss, params, svrg,
-                                         batches, step_size=0.3, cfg=cfg,
-                                         rng=jax.random.fold_in(key, e))
+        params, ef = bounded_staleness_epoch(mesh, _quad_loss, params, svrg,
+                                             batches, step_size=0.3, cfg=cfg,
+                                             rng=jax.random.fold_in(key, e),
+                                             ef=ef)
     err = float(jnp.linalg.norm(params["w"] - target.mean(0)))
     assert err < 0.25, err
+
+
+def test_error_feedback_residual_carried_across_epochs():
+    """Regression: the compression residual must PERSIST across epochs.
+
+    A fresh `init_error_feedback` inside every call silently discarded the
+    updated state, so nothing untransmitted was ever re-injected — error
+    feedback (the point of the Stich-style compressor) never accumulated.
+    Now the [W]-leading EF state threads in/out: epoch 1's residual equals
+    the manual compress-of-delta remainder, and epoch 2's reconcile with
+    the carried residual differs from one with a zeroed residual.
+    """
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(0)
+    dim, H = 8, 4
+    params = {"w": jnp.zeros(dim)}
+    target = jax.random.normal(key, (H, 2, dim))
+    svrg = snapshot_finalize(
+        params, snapshot_accumulate(
+            _quad_loss, params,
+            snapshot_begin(init_svrg_state(params)),
+            target.reshape(-1, dim)), 0)
+    cfg = SVRGConfig(local_steps=H, compression="topk", compression_k=0.25)
+    batches = reshape_for_workers(target, 1, H)
+    rng = jax.random.PRNGKey(9)
+
+    params1, ef1 = bounded_staleness_epoch(mesh, _quad_loss, params, svrg,
+                                           batches, step_size=0.1, cfg=cfg,
+                                           rng=rng)
+    res1 = np.asarray(ef1.residual["w"])
+    assert res1.shape == (1, dim)             # [W=1]-leading, per-worker
+    assert np.abs(res1).sum() > 0             # top-k at 25% left a remainder
+
+    # manual reference: delta from W=1 sequential local steps; the worker's
+    # key is split exactly as bounded_staleness_epoch does
+    w = params
+    for h in range(H):
+        b = target[h]
+        g = jax.grad(_quad_loss)(w, b)
+        g0 = jax.grad(_quad_loss)(svrg.w_snap, b)
+        v = svrg_direction(g, g0, svrg.g_snap)
+        w = jax.tree.map(lambda wi, vi: wi - 0.1 * vi, w, v)
+    delta = tree_sub(w, params)
+    wkey = jax.random.split(rng, 2)[0]
+    sent, ef_ref = compressed_update(
+        delta, init_error_feedback(delta), "topk", 0.25, wkey)
+    np.testing.assert_allclose(res1[0], np.asarray(ef_ref.residual["w"]),
+                               rtol=1e-6)
+
+    # epoch 2: carried residual is re-injected -> different reconcile than
+    # a (buggy) zeroed one
+    rng2 = jax.random.fold_in(rng, 1)
+    with_ef, ef2 = bounded_staleness_epoch(mesh, _quad_loss, params1, svrg,
+                                           batches, step_size=0.1, cfg=cfg,
+                                           rng=rng2, ef=ef1)
+    without_ef, _ = bounded_staleness_epoch(mesh, _quad_loss, params1, svrg,
+                                            batches, step_size=0.1, cfg=cfg,
+                                            rng=rng2)
+    assert not np.allclose(np.asarray(with_ef["w"]),
+                           np.asarray(without_ef["w"]))
+    assert ef2.residual["w"].shape == (1, dim)
+
+
+def test_init_worker_error_feedback_shapes():
+    params = {"w": jnp.zeros(6), "b": jnp.zeros((2, 3))}
+    ef = init_worker_error_feedback(params, 4)
+    assert ef.residual["w"].shape == (4, 6)
+    assert ef.residual["b"].shape == (4, 2, 3)
+    assert float(sum(jnp.sum(jnp.abs(x)) for x in jax.tree.leaves(ef.residual))) == 0.0

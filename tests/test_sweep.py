@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import (LogisticRegression, SweepSpec, make_grid,
-                        run_asysvrg, run_sweep)
+                        plan_sweep, run_asysvrg, run_sweep)
 from repro.core.asysvrg import (
     DELAY_IDS, SCHEME_IDS, _READERS, _delay_schedule_core,
     make_delay_schedule, read_dispatch)
@@ -130,3 +130,124 @@ def test_sweep_rejects_bad_specs(obj):
         run_sweep(obj, 1, [SweepSpec(scheme="nope")])
     with pytest.raises(ValueError):
         run_sweep(obj, 1, [SweepSpec(delay_kind="nope")])
+    with pytest.raises(ValueError):
+        run_sweep(obj, 1, [SweepSpec(epochs=-1)])
+    with pytest.raises(ValueError):
+        run_sweep(obj, 0, [SweepSpec()])    # resolved epochs must be >= 1
+
+
+# ---------------------------------------------------------------------------
+# masked per-row epochs
+# ---------------------------------------------------------------------------
+
+def test_per_row_epochs_match_independent_shorter_runs(obj):
+    """Rows with epochs ∈ {1,2,3} in ONE call: each is bit-identical to an
+    independent run of its own length, the frozen tail repeats the final
+    loss, and accounting (passes/updates) stops at the row's budget."""
+    specs = [SweepSpec(scheme="inconsistent", step_size=0.5, tau=3,
+                       num_threads=4, inner_steps=25, seed=7, epochs=e)
+             for e in (1, 2, 3)]
+    res = run_sweep(obj, 3, specs)
+    assert res.histories.shape == (3, 4)
+    for c, spec in enumerate(specs):
+        seq = run_asysvrg(obj, spec.epochs, spec.to_config(), seed=7)
+        np.testing.assert_array_equal(
+            np.asarray(seq.history, np.float32),
+            res.histories[c, :spec.epochs + 1],
+            err_msg=f"history mismatch for epochs={spec.epochs}")
+        np.testing.assert_array_equal(np.asarray(seq.w, np.float32),
+                                      res.final_w[c])
+        assert np.all(res.histories[c, spec.epochs:]
+                      == res.histories[c, spec.epochs])
+        assert int(res.total_updates[c]) == seq.total_updates
+        assert int(res.epochs_per_row[c]) == spec.epochs
+        passes, hist = res.curve(c)
+        assert len(hist) == spec.epochs + 1
+        np.testing.assert_allclose(passes, np.asarray(seq.effective_passes))
+
+
+def test_epochs_zero_inherits_call_default(obj):
+    """epochs=0 rows inherit run_sweep's argument and mix freely with
+    explicit budgets; the default row matches a default-length run."""
+    specs = [SweepSpec(scheme="consistent", step_size=0.5, tau=3,
+                       num_threads=4, inner_steps=25, seed=1),
+             SweepSpec(scheme="consistent", step_size=0.5, tau=3,
+                       num_threads=4, inner_steps=25, seed=1, epochs=4)]
+    res = run_sweep(obj, 2, specs)
+    assert list(res.epochs_per_row) == [2, 4]
+    seq2 = run_asysvrg(obj, 2, specs[0].to_config(), seed=1)
+    seq4 = run_asysvrg(obj, 4, specs[1].to_config(), seed=1)
+    np.testing.assert_array_equal(np.asarray(seq2.history, np.float32),
+                                  res.histories[0, :3])
+    np.testing.assert_array_equal(np.asarray(seq4.history, np.float32),
+                                  res.histories[1])
+    np.testing.assert_array_equal(np.asarray(seq2.w, np.float32),
+                                  res.final_w[0])
+    np.testing.assert_array_equal(np.asarray(seq4.w, np.float32),
+                                  res.final_w[1])
+
+
+# ---------------------------------------------------------------------------
+# spec normalization + per-row compiled-shape pinning
+# ---------------------------------------------------------------------------
+
+def test_svrg_specs_normalized_to_what_executes(obj):
+    """svrg rows execute consistent/zero-delay/τ=0; the result's specs (and
+    row() records) must say so even when the input spec left the
+    asysvrg-flavoured defaults in place."""
+    res = run_sweep(obj, 1, [SweepSpec(algo="svrg", step_size=0.5,
+                                       num_threads=1, inner_steps=30)])
+    s = res.specs[0]
+    assert (s.scheme, s.delay_kind, s.tau) == ("consistent", "zero", 0)
+    rec = res.row(0)
+    assert rec["scheme"] == "consistent" and rec["delay_kind"] == "zero"
+    assert rec["epochs"] == 1
+
+
+def test_svrg_contradictory_tau_raises(obj):
+    with pytest.raises(ValueError, match="degenerate"):
+        run_sweep(obj, 1, [SweepSpec(algo="svrg", tau=3)])
+
+
+def test_result_specs_report_derived_tau_and_zero_delay(obj):
+    """Convention sentinels are resolved in the result: asysvrg tau=0 means
+    τ=p−1, and a genuinely zero-delay row reports delay_kind='zero'."""
+    specs = [SweepSpec(scheme="inconsistent", step_size=0.5, tau=0,
+                       num_threads=4, inner_steps=25),
+             SweepSpec(scheme="consistent", step_size=0.5, tau=0,
+                       num_threads=1, inner_steps=25)]
+    res = run_sweep(obj, 1, specs)
+    assert res.specs[0].tau == 3                       # derived p−1
+    assert res.specs[0].delay_kind == "fixed"
+    assert res.specs[1].tau == 0                       # p=1 -> genuinely 0
+    assert res.specs[1].delay_kind == "zero"
+
+
+def test_buf_len_pinned_per_row(obj):
+    """Adding an unrelated high-τ row must not change another row's group
+    key (= compiled program shape): buf_len comes from the row's own
+    (τ, threads), not from whichever rows share the group."""
+    a = SweepSpec(scheme="inconsistent", step_size=0.5, tau=3,
+                  num_threads=4, inner_steps=25)
+    b = SweepSpec(scheme="inconsistent", step_size=0.5, tau=50,
+                  num_threads=4, inner_steps=25)
+    p_alone = plan_sweep(obj, 2, [a])
+    p_both = plan_sweep(obj, 2, [a, b])
+    key_alone = next(k for k, v in p_alone.groups.items() if 0 in v)
+    key_both = next(k for k, v in p_both.groups.items() if 0 in v)
+    assert key_alone == key_both
+    assert len(p_both.groups) == 2      # the τ=50 row got its own group
+    # and the split groups still produce bit-identical rows
+    res = run_sweep(obj, 2, [a, b])
+    _assert_rows_match_sequential(obj, [a, b], res, 2)
+
+
+def test_tau_axis_shares_one_group_at_fixed_thread_count(obj):
+    """The frontier's τ axis (one thread count, τ ≤ p−1) must stay ONE
+    compiled group — buf_len pinning pads to the thread count."""
+    specs = [SweepSpec(scheme="inconsistent", step_size=0.5, tau=t,
+                       num_threads=4, inner_steps=25) for t in (1, 2, 3)]
+    plan = plan_sweep(obj, 2, specs)
+    assert len(plan.groups) == 1
+    (engine, total, option, buf_len), = plan.groups
+    assert buf_len == 4                 # p, not max(τ)+1 of the members

@@ -158,16 +158,71 @@ def test_sweep_rejects_bad_algo(obj):
         run_sweep(obj, 1, [SweepSpec(algo="nope")])
 
 
+def test_hogwild_per_row_epochs_match_shorter_runs(obj):
+    """Hogwild! rows with different epoch budgets in one call: each equals
+    an independent run of its own length (γ-decay freezes with the row)."""
+    specs = [SweepSpec(algo="hogwild", scheme="unlock", step_size=0.5,
+                       tau=2, num_threads=3, seed=2, epochs=e)
+             for e in (2, 5)]
+    res = run_sweep(obj, 5, specs)
+    for c, spec in enumerate(specs):
+        seq = run_hogwild(obj, spec.epochs, 0.5, num_threads=3,
+                          scheme="unlock", tau=2, seed=2)
+        np.testing.assert_array_equal(
+            np.asarray(seq.history, np.float32),
+            res.histories[c, :spec.epochs + 1])
+        np.testing.assert_array_equal(np.asarray(seq.w, np.float32),
+                                      res.final_w[c])
+        assert int(res.total_updates[c]) == seq.total_updates
+        assert np.all(res.histories[c, spec.epochs:]
+                      == res.histories[c, spec.epochs])
+
+
+def test_fig1_paired_epoch_budgets_single_call(obj):
+    """Acceptance: Fig. 1's paired budgets — AsySVRG E epochs vs Hogwild!
+    3E epochs (equal effective passes) — execute as ONE run_sweep call,
+    bit-identical to the old two-call split."""
+    E, p = 2, 4
+    asy = [SweepSpec(scheme=s, step_size=0.5, num_threads=p, tau=p - 1,
+                     epochs=E)                 # M̃ = 2n -> ~3 passes/epoch
+           for s in ("inconsistent", "unlock")]
+    hog = [SweepSpec(algo="hogwild", scheme=s, step_size=0.5,
+                     num_threads=p, tau=p - 1, epochs=3 * E)
+           for s in ("inconsistent", "unlock")]
+    res = run_sweep(obj, E, asy + hog)
+    assert res.histories.shape == (4, 3 * E + 1)
+
+    res_asy = run_sweep(obj, E, asy)
+    res_hog = run_sweep(obj, 3 * E, hog)
+    for c in range(2):
+        passes, hist = res.curve(c)
+        np.testing.assert_array_equal(hist, res_asy.histories[c])
+        np.testing.assert_allclose(passes, res_asy.effective_passes[c])
+        assert len(hist) == E + 1
+    for c in range(2):
+        passes, hist = res.curve(2 + c)
+        np.testing.assert_array_equal(hist, res_hog.histories[c])
+        np.testing.assert_allclose(passes, res_hog.effective_passes[c])
+        assert len(hist) == 3 * E + 1
+    # equal effective-pass coverage is the point of the 3x pairing
+    assert abs(res.curve(0)[0][-1] - res.curve(2)[0][-1]) <= 0.5
+
+
 def test_frontier_grid_smoke(obj):
-    """frontier_stability's one-call grid: shape, verdicts, and a sane
-    frontier (τ=0 admits at least as large a step as the largest τ)."""
+    """frontier_stability's one-call grid: shape, verdicts, a sane frontier
+    (τ=0 admits at least as large a step as the largest τ), and the
+    pass-matched Hogwild! edge (3× per-row epochs) riding the same call."""
     from benchmarks.frontier_stability import run as frontier_run
     out = frontier_run(scale=0.002, steps=(0.5, 8.0), taus=(0, 3),
                       epochs=2)
-    assert out["grid_size"] == 4
+    assert out["grid_size"] == 6        # 4 async/svrg cells + 2 hogwild
     assert {c["verdict"] for c in out["cells"]} <= {"stable", "diverged"}
     assert set(out["frontier"]) == {0, 3}
     assert out["frontier"][0] >= out["frontier"][3]
+    assert set(out["frontier_hogwild"]) == {3}
+    hog_cells = [c for c in out["cells"] if c["algo"] == "hogwild"]
+    assert len(hog_cells) == 2
+    assert all(c["epochs"] == 6 for c in hog_cells)   # 3 x pass-matched
 
 
 @pytest.mark.slow
