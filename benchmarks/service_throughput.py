@@ -1,0 +1,141 @@
+"""Sweep-service throughput: cold vs warm runner cache, coalesced vs
+sequential request dispatch.
+
+Two measurements quantify what `repro.service` buys a grid-serving
+deployment (the regime the paper's "compute cost per effective pass"
+framing targets — repeated/concurrent grids, not one grid):
+
+  * COLD vs WARM — the same `run_sweep` twice from an empty runner cache.
+    The first call compiles its group runners; the second fetches them from
+    the persistent cache and compiles NOTHING, so the warm/cold latency
+    ratio isolates the XLA compilation tax a cache-less service pays on
+    EVERY call. Reported as ``warm_cold_ratio`` (acceptance criterion) with
+    the compile counters for both calls.
+  * COALESCED vs SEQUENTIAL — K logical clients each holding a compatible
+    slice of a grid. Sequential serving runs K warm `run_sweep` calls (K
+    separate small-batch dispatches); the service admits all K requests and
+    flushes ONCE, merging their rows into shared compiled groups (one big
+    vmap batch per group, padding only the device-count remainder under
+    ``--sharded``). Per-request results are bit-identical either way — the
+    suite pins that; this benchmark records the throughput ratio.
+
+Writes ``BENCH_service_throughput.json``. ``--quick`` shrinks the grid for
+the CI smoke; ``--sharded`` runs every dispatch over the host's devices
+(`make_sweep_mesh`), the CI `tier1-multidevice` smoke.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.artifacts import write_bench_json
+from repro.core import LogisticRegression, SweepSpec, run_sweep
+from repro.data.libsvm import make_synthetic_libsvm
+from repro.launch.mesh import make_sweep_mesh
+from repro.service import SweepService, cache_stats, clear_cache
+
+N_CLIENTS = 6
+
+
+def _client_specs(client: int, seeds, steps) -> list:
+    """One client's compatible slice: same static dims, its own seeds."""
+    return [SweepSpec(scheme=("consistent", "inconsistent", "unlock")[c % 3],
+                      step_size=step, tau=3, num_threads=4, inner_steps=25,
+                      seed=1000 * client + s)
+            for c, (s, step) in enumerate((s, st) for s in seeds
+                                          for st in steps)]
+
+
+def run(quick: bool = False, sharded: bool = False):
+    ds = make_synthetic_libsvm("real-sim", seed=11,
+                               scale=0.002 if quick else 0.01)
+    obj = LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+    epochs = 2 if quick else 4
+    seeds = range(2) if quick else range(4)
+    steps = (0.5,) if quick else (0.25, 0.5)
+    clients = [_client_specs(k, seeds, steps) for k in range(N_CLIENTS)]
+    mesh = make_sweep_mesh() if sharded and jax.device_count() > 1 else None
+
+    # ---- cold vs warm: the recompilation tax the cache removes
+    clear_cache()
+    t0 = time.perf_counter()
+    first = run_sweep(obj, epochs, clients[0], mesh=mesh)
+    cold_s = time.perf_counter() - t0
+    cold = cache_stats()
+    t0 = time.perf_counter()
+    second = run_sweep(obj, epochs, clients[0], mesh=mesh)
+    warm_s = time.perf_counter() - t0
+    warm = cache_stats().since(cold)
+    np.testing.assert_array_equal(first.histories, second.histories)
+    if warm.compiles:
+        raise AssertionError(
+            f"warm sweep recompiled ({warm.compiles} traces) — runner "
+            "cache regression")
+
+    # ---- sequential: K warm per-client dispatches (cache already warm for
+    # this shape from the cold/warm phase, so this isolates dispatch cost)
+    t0 = time.perf_counter()
+    seq_results = [run_sweep(obj, epochs, specs, mesh=mesh)
+                   for specs in clients]
+    sequential_s = time.perf_counter() - t0
+
+    # ---- coalesced: one flush serves all K clients from shared groups.
+    # One warm-up flush first so BOTH paths measure steady-state serving
+    # (the sequential loop above reused the cold/warm phase's compilation)
+    svc = SweepService(obj, epochs=epochs, mesh=mesh)
+    for specs in clients:
+        svc.submit(specs)
+    svc.flush()
+    rids = [svc.submit(specs) for specs in clients]
+    t0 = time.perf_counter()
+    svc.flush()
+    coalesced_s = time.perf_counter() - t0
+    for rid, seq in zip(rids, seq_results):
+        np.testing.assert_array_equal(svc.result(rid).histories,
+                                      seq.histories)
+    stats = svc.stats()
+
+    rows = sum(len(s) for s in clients)
+    return {
+        "dataset": "real-sim", "epochs": epochs,
+        "clients": N_CLIENTS, "rows_per_client": len(clients[0]),
+        "devices": jax.device_count() if mesh is not None else 1,
+        "cold_s": cold_s, "warm_s": warm_s,
+        "warm_cold_ratio": warm_s / cold_s,
+        "cold_compiles": cold.compiles, "warm_compiles": warm.compiles,
+        "sequential_s": sequential_s, "coalesced_s": coalesced_s,
+        "coalesced_speedup": sequential_s / coalesced_s,
+        "sequential_rows_per_s": rows / sequential_s,
+        "coalesced_rows_per_s": rows / coalesced_s,
+        "rows_coalesced": stats.rows_coalesced,
+        "groups_merged": stats.groups_merged,
+        "groups_dispatched": stats.groups_dispatched,
+        "cache_hit_rate": stats.cache_hit_rate,
+        "service_compiles": stats.compiles,
+    }
+
+
+def main(quick: bool = True, sharded: bool = False):
+    out = run(quick=quick, sharded=sharded)
+    write_bench_json("service_throughput", out)
+    print("name,us_per_call,derived")
+    print(f"service_cold_sweep,{out['cold_s'] * 1e6:.1f},"
+          f"compiles={out['cold_compiles']}")
+    print(f"service_warm_sweep,{out['warm_s'] * 1e6:.1f},"
+          f"warm_cold_ratio={out['warm_cold_ratio']:.3f};compiles=0")
+    print(f"service_sequential_{out['clients']}req,"
+          f"{out['sequential_s'] * 1e6:.1f},"
+          f"rows_per_s={out['sequential_rows_per_s']:.1f}")
+    print(f"service_coalesced_{out['clients']}req,"
+          f"{out['coalesced_s'] * 1e6:.1f},"
+          f"rows_per_s={out['coalesced_rows_per_s']:.1f};"
+          f"speedup={out['coalesced_speedup']:.2f};"
+          f"rows_coalesced={out['rows_coalesced']};"
+          f"devices={out['devices']}")
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv, sharded="--sharded" in sys.argv)

@@ -119,11 +119,30 @@ class Checkpointer:
             flat = {k: npz[k] for k in npz.files}
 
         paths, treedef = jax.tree_util.tree_flatten_with_path(template)
-        leaves = []
-        for p, leaf in paths:
-            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
-            arr = flat[key]
-            leaves.append(arr)
+        keys = ["/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                         for q in p) for p, _ in paths]
+        missing = [k for k in keys if k not in flat]
+        if missing:
+            raise KeyError(
+                f"checkpoint step {step} in {self.dir} does not match the "
+                f"restore template: missing keys {missing} "
+                f"(checkpoint holds {sorted(flat)})")
+        def leaf_spec(leaf):
+            # shape/dtype without materializing device arrays on the host
+            return (tuple(np.shape(leaf)),
+                    np.dtype(getattr(leaf, "dtype", None)
+                             or np.result_type(leaf)))
+
+        mismatched = [
+            f"{k}: checkpoint {flat[k].shape}/{flat[k].dtype} != template "
+            f"{leaf_spec(leaf)[0]}/{leaf_spec(leaf)[1]}"
+            for k, (_, leaf) in zip(keys, paths)
+            if (flat[k].shape, flat[k].dtype) != leaf_spec(leaf)]
+        if mismatched:
+            raise ValueError(
+                f"checkpoint step {step} in {self.dir} does not match the "
+                f"restore template: {'; '.join(mismatched)}")
+        leaves = [flat[key] for key in keys]
         state = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             state = jax.tree.map(

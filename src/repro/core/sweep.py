@@ -69,6 +69,16 @@ a group share a thread count, which the paper's grids do; the ring-buffer
 slot arithmetic uses the dynamic τ, so buf_len only affects shapes, never
 bits. A grid over schemes / seeds / steps / τ / delay-kinds / epochs at one
 thread count is one group per algo.
+
+**Persistent compiled runners.** The group bodies (`_asysvrg_group_fn` /
+`_hogwild_group_fn`) close over HASHABLE STATICS ONLY — ``X``/``y``/``l2``
+and the per-row ``w0`` enter as runtime arguments — and every dispatch goes
+through the module-level runner cache in `repro.service.cache`, keyed on
+(engine, M̃, option, buf_len, epochs-bound, drop_prob, mesh fingerprint,
+data shape/dtype). A repeated same-shape `run_sweep` therefore reuses the
+previous call's jitted runner and compiles NOTHING (tests/test_service.py
+counts traces to prove it), and the `repro.service` scheduler coalesces
+many clients' specs through the same runners.
 """
 from __future__ import annotations
 
@@ -252,7 +262,12 @@ def _normalize_spec(spec: SweepSpec) -> SweepSpec:
 
 def _resolve(obj: LogisticRegression, spec: SweepSpec,
              default_epochs: int) -> _Resolved:
-    """Per-spec resolution, delegating to each algorithm's own arithmetic."""
+    """Per-spec resolution, delegating to each algorithm's own arithmetic.
+
+    Raises (rather than letting a negative M̃ surface as a cryptic
+    trace-time shape error) for non-positive resolved totals — this is the
+    validation the service relies on to reject a bad spec at submit time.
+    """
     epochs = spec.epochs or default_epochs
     if epochs < 1:
         raise ValueError(f"resolved epochs must be >= 1, got {epochs}")
@@ -261,23 +276,27 @@ def _resolve(obj: LogisticRegression, spec: SweepSpec,
         _, total, tau = _resolve_hogwild_steps(obj.n, spec.num_threads,
                                                spec.tau)
         delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
-        return _Resolved(_ENGINE_HOGWILD, total, tau,
-                         SCHEME_IDS[spec.scheme], delay_id, 0, 1.0,
-                         _row_buf_len(tau, spec.num_threads, total), epochs)
-
-    if spec.algo == "svrg":
+        res = _Resolved(_ENGINE_HOGWILD, total, tau,
+                        SCHEME_IDS[spec.scheme], delay_id, 0, 1.0,
+                        _row_buf_len(tau, spec.num_threads, total), epochs)
+    elif spec.algo == "svrg":
         # the zero-delay degenerate case on the asysvrg engine (paper §3)
         total = spec.inner_steps or 2 * obj.n
-        return _Resolved(_ENGINE_ASYSVRG, total, 0,
-                         SCHEME_IDS["consistent"], DELAY_IDS["zero"],
-                         spec.option, 1.0 + total / obj.n,
-                         _row_buf_len(0, spec.num_threads, total), epochs)
-
-    _, _, total, tau = _resolve_steps(obj, spec.to_config())
-    delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
-    return _Resolved(_ENGINE_ASYSVRG, total, tau, SCHEME_IDS[spec.scheme],
-                     delay_id, spec.option, 1.0 + total / obj.n,
-                     _row_buf_len(tau, spec.num_threads, total), epochs)
+        res = _Resolved(_ENGINE_ASYSVRG, total, 0,
+                        SCHEME_IDS["consistent"], DELAY_IDS["zero"],
+                        spec.option, 1.0 + total / obj.n,
+                        _row_buf_len(0, spec.num_threads, total), epochs)
+    else:
+        _, _, total, tau = _resolve_steps(obj, spec.to_config())
+        delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
+        res = _Resolved(_ENGINE_ASYSVRG, total, tau, SCHEME_IDS[spec.scheme],
+                        delay_id, spec.option, 1.0 + total / obj.n,
+                        _row_buf_len(tau, spec.num_threads, total), epochs)
+    if res.total < 1:
+        raise ValueError(
+            f"resolved inner-step count M̃ must be >= 1, got {res.total} "
+            f"(inner_steps={spec.inner_steps}) for {spec}")
+    return res
 
 
 def _executed_spec(spec: SweepSpec, r: _Resolved) -> SweepSpec:
@@ -340,25 +359,6 @@ def _active_mesh(mesh: Optional[Mesh]) -> Optional[Mesh]:
     return mesh
 
 
-def _maybe_shard_rows(fn, mesh: Optional[Mesh], num_in: int):
-    """jit the vmapped group body, sharding the row axis over `data`.
-
-    Every input/output is row-leading, so in/out specs are all
-    ``P("data")`` — each device runs the identical program over its row
-    shard and NO collective crosses rows, which is why sharded rows stay
-    bit-identical to the unsharded path. (`check_rep=False`: mesh axes
-    other than `data` — e.g. `model` in the production mesh — replicate
-    the rows redundantly, which is deterministic and harmless.)
-    """
-    if mesh is None:
-        return jax.jit(fn)
-    spec = P(_DATA_AXIS)
-    return jax.jit(shard_map(fn, mesh=mesh,
-                             in_specs=(spec,) * num_in,
-                             out_specs=(spec, spec),
-                             check_rep=False))
-
-
 def _pad_rows(args: Tuple[jnp.ndarray, ...], pad: int):
     """Pad each row-leading array by replicating row 0 (a valid config —
     padding rows compute real, discarded work)."""
@@ -367,52 +367,200 @@ def _pad_rows(args: Tuple[jnp.ndarray, ...], pad: int):
     return tuple(jnp.concatenate([a] + [a[:1]] * pad, axis=0) for a in args)
 
 
-def _asysvrg_group_runner(X, y, l2: float, epochs: int, total: int,
-                          buf_len: int, option: int, drop_prob: float,
-                          mesh: Optional[Mesh]):
-    """jit(vmap(per-config masked epochs-scan)) for one asysvrg/svrg group,
-    row-sharded over the mesh `data` axis when one is active."""
-
-    def per_config(key, eta, tau, scheme_id, delay_id, row_epochs, w0):
-        loss0 = loss_fixed_order(X, y, l2, w0)
-
-        def step(carry, e):
-            w, key, loss_prev = carry
-            key, sub = jax.random.split(key)
-            active = e < row_epochs
-            w_new = _epoch_core(
-                X, y, l2, w, sub, eta, tau, scheme_id, delay_id,
-                total=total, buf_len=buf_len, option=option,
-                drop_prob=drop_prob)
-            # frozen rows: carry passthrough + masked loss write (the last
-            # live loss is re-emitted), so a row with a shorter budget is
-            # bit-identical to an independent shorter run
-            w_next = jnp.where(active, w_new, w)
-            loss_next = jnp.where(active, loss_fixed_order(X, y, l2, w_next),
-                                  loss_prev)
-            return (w_next, key, loss_next), loss_next
-
-        (w_fin, _, _), losses = jax.lax.scan(
-            step, (w0, key, loss0), jnp.arange(epochs))
-        return w_fin, jnp.concatenate([loss0[None], losses])
-
-    return _maybe_shard_rows(jax.vmap(per_config), mesh, num_in=7)
+# row-leading runtime arguments per engine (after the X, y, l2 data args)
+_NUM_ROW_ARGS = {_ENGINE_ASYSVRG: 7, _ENGINE_HOGWILD: 8}
 
 
-def _hogwild_group_runner(X, y, l2: float, epochs: int, total: int,
-                          buf_len: int, drop_prob: float,
-                          mesh: Optional[Mesh]):
-    """jit(vmap(multi-epoch Hogwild! scan, γ-decay in the carry)),
-    row-sharded over the mesh `data` axis when one is active."""
+def _asysvrg_group_fn(epochs: int, total: int, buf_len: int, option: int,
+                      drop_prob: float):
+    """vmap(per-config masked epochs-scan) for one asysvrg/svrg group.
 
-    def per_config(key, gamma0, decay, tau, scheme_id, delay_id, row_epochs,
-                   w0):
-        return _hogwild_epochs_core(
-            X, y, l2, w0, key, gamma0, decay, tau, scheme_id, delay_id,
-            epochs=epochs, total=total, buf_len=buf_len,
-            drop_prob=drop_prob, row_epochs=row_epochs)
+    Closes over HASHABLE STATICS ONLY — the data (X, y, l2) and every
+    per-row array are runtime arguments — so the returned function can live
+    in the persistent runner cache (repro.service.cache) and repeated
+    same-shape sweeps reuse one compiled program.
+    """
 
-    return _maybe_shard_rows(jax.vmap(per_config), mesh, num_in=8)
+    def group(X, y, l2, keys, etas, taus, scheme_ids, delay_ids, row_epochs,
+              w0_rows):
+        def per_config(key, eta, tau, scheme_id, delay_id, row_epochs, w0):
+            loss0 = loss_fixed_order(X, y, l2, w0)
+
+            def step(carry, e):
+                w, key, loss_prev = carry
+                key, sub = jax.random.split(key)
+                active = e < row_epochs
+                w_new = _epoch_core(
+                    X, y, l2, w, sub, eta, tau, scheme_id, delay_id,
+                    total=total, buf_len=buf_len, option=option,
+                    drop_prob=drop_prob)
+                # frozen rows: carry passthrough + masked loss write (the
+                # last live loss is re-emitted), so a row with a shorter
+                # budget is bit-identical to an independent shorter run
+                w_next = jnp.where(active, w_new, w)
+                loss_next = jnp.where(active,
+                                      loss_fixed_order(X, y, l2, w_next),
+                                      loss_prev)
+                return (w_next, key, loss_next), loss_next
+
+            (w_fin, _, _), losses = jax.lax.scan(
+                step, (w0, key, loss0), jnp.arange(epochs))
+            return w_fin, jnp.concatenate([loss0[None], losses])
+
+        return jax.vmap(per_config)(keys, etas, taus, scheme_ids, delay_ids,
+                                    row_epochs, w0_rows)
+
+    return group
+
+
+def _hogwild_group_fn(epochs: int, total: int, buf_len: int,
+                      drop_prob: float):
+    """vmap(multi-epoch Hogwild! scan, γ-decay in the carry); hashable
+    statics only — data and row arrays enter at call time (see
+    `_asysvrg_group_fn`)."""
+
+    def group(X, y, l2, keys, gammas, decays, taus, scheme_ids, delay_ids,
+              row_epochs, w0_rows):
+        def per_config(key, gamma0, decay, tau, scheme_id, delay_id,
+                       row_epochs, w0):
+            return _hogwild_epochs_core(
+                X, y, l2, w0, key, gamma0, decay, tau, scheme_id, delay_id,
+                epochs=epochs, total=total, buf_len=buf_len,
+                drop_prob=drop_prob, row_epochs=row_epochs)
+
+        return jax.vmap(per_config)(keys, gammas, decays, taus, scheme_ids,
+                                    delay_ids, row_epochs, w0_rows)
+
+    return group
+
+
+def _group_fn(engine: str, *, epochs: int, total: int, buf_len: int,
+              option: int, drop_prob: float):
+    """(unjitted group body, row-arg count) for the runner cache."""
+    if engine == _ENGINE_HOGWILD:
+        return (_hogwild_group_fn(epochs, total, buf_len, drop_prob),
+                _NUM_ROW_ARGS[engine])
+    return (_asysvrg_group_fn(epochs, total, buf_len, option, drop_prob),
+            _NUM_ROW_ARGS[engine])
+
+
+def _shard_group_fn(fn, mesh: Mesh, num_row: int):
+    """shard_map the group body: data args (X, y, l2) replicate, every
+    row-leading input/output shards over `data`.
+
+    Each device runs the identical program over its row shard and NO
+    collective crosses rows, which is why sharded rows stay bit-identical
+    to the unsharded path. (`check_rep=False`: mesh axes other than `data`
+    — e.g. `model` in the production mesh — replicate the rows redundantly,
+    which is deterministic and harmless.)
+    """
+    spec = P(_DATA_AXIS)
+    return shard_map(fn, mesh=mesh,
+                     in_specs=(P(), P(), P()) + (spec,) * num_row,
+                     out_specs=(spec, spec),
+                     check_rep=False)
+
+
+def _accumulate_passes(ppe: Sequence[float], epochs_per_row: np.ndarray,
+                       max_epochs: int) -> np.ndarray:
+    """[C, max_epochs+1] cumulative effective passes, vectorized.
+
+    ``np.cumsum``'s running float64 sum is the same left-to-right addition
+    order as the sequential drivers' ``acc += passes_per_epoch`` loop, and
+    frozen rows add 0.0 — bitwise a no-op for the non-negative partial sums
+    here — so this replaces the old O(C·E) Python loop bit-identically.
+    """
+    ppe_col = np.asarray(ppe, np.float64)[:, None]
+    live = np.arange(max_epochs)[None, :] < np.asarray(epochs_per_row)[:, None]
+    out = np.zeros((len(epochs_per_row), max_epochs + 1), np.float64)
+    out[:, 1:] = np.cumsum(np.where(live, ppe_col, 0.0), axis=1)
+    return out
+
+
+def _write_row_history(dst_row: np.ndarray, hist_row: np.ndarray,
+                       group_epochs: int) -> None:
+    """Demux ONE row's group-width history into a destination row of any
+    width — the single definition of the freeze/trim rule every dispatch
+    path (run_sweep, the service scheduler, checkpointed jobs) shares.
+
+    Beyond a row's own budget every entry is the frozen last live loss, so
+    trimming (destination narrower than the group scan) and re-emitting
+    the tail (destination wider) are both bit-exact.
+    """
+    width = dst_row.shape[0]
+    if width <= group_epochs + 1:
+        dst_row[:] = hist_row[:width]
+    else:
+        dst_row[:group_epochs + 1] = hist_row
+        dst_row[group_epochs + 1:] = hist_row[-1]
+
+
+def _dispatch_group(obj: LogisticRegression, specs: Sequence[SweepSpec],
+                    resolved: Sequence[_Resolved], members: Sequence[int],
+                    key_: _GroupKey, group_epochs: int, w_init,
+                    drop_prob: float, mesh: Optional[Mesh]):
+    """Run ONE (engine, M̃, option, buf_len) group through the persistent
+    runner cache; returns (histories [rows, group_epochs+1], final_w
+    [rows, p]) as numpy, padding rows already sliced off.
+
+    ``specs``/``resolved`` are row-aligned sequences indexed by ``members``
+    — `run_sweep` passes a single plan's rows, the service scheduler a
+    coalesced multi-request batch. The runner comes from
+    `repro.service.cache` (imported lazily; the service layer builds on
+    this module), so every caller shares one compiled program per key.
+    """
+    from repro.service.cache import get_group_runner
+
+    engine, total, option, buf_len = key_
+    keys = jax.vmap(jax.random.PRNGKey)(
+        jnp.asarray([specs[c].seed for c in members]))
+    etas = jnp.asarray([specs[c].step_size for c in members], jnp.float32)
+    taus_a = jnp.asarray([resolved[c].tau for c in members], jnp.int32)
+    scheme_ids = jnp.asarray([resolved[c].scheme_id for c in members],
+                             jnp.int32)
+    delay_ids = jnp.asarray([resolved[c].delay_id for c in members],
+                            jnp.int32)
+    row_epochs = jnp.asarray([resolved[c].epochs for c in members],
+                             jnp.int32)
+    w0_rows = jnp.tile(w_init[None, :], (len(members), 1))
+
+    if engine == _ENGINE_HOGWILD:
+        decays = jnp.asarray([specs[c].decay for c in members], jnp.float32)
+        args = (keys, etas, decays, taus_a, scheme_ids, delay_ids,
+                row_epochs, w0_rows)
+    else:
+        args = (keys, etas, taus_a, scheme_ids, delay_ids, row_epochs,
+                w0_rows)
+
+    runner = get_group_runner(engine, group_epochs=group_epochs, total=total,
+                              option=option, buf_len=buf_len,
+                              drop_prob=drop_prob, mesh=mesh,
+                              X=obj.X, y=obj.y)
+    if mesh is not None:
+        # pad the row axis to a multiple of the data-axis size; padded rows
+        # replicate row 0 and are sliced off below
+        args = _pad_rows(args, -len(members) % int(mesh.shape[_DATA_AXIS]))
+    w_fin, hist = runner(obj.X, obj.y, jnp.float32(obj.l2), *args)
+    return (np.asarray(hist)[:len(members)],
+            np.asarray(w_fin)[:len(members)])
+
+
+def _assemble_result(specs: Tuple[SweepSpec, ...],
+                     resolved: Sequence[_Resolved], histories: np.ndarray,
+                     final_w: np.ndarray) -> SweepResult:
+    """Derive the accounting rows (passes, totals, epoch budgets) from the
+    resolved specs and build the `SweepResult` — the ONE definition all
+    dispatch paths (run_sweep, service demux, checkpointed jobs) share, so
+    accounting can never diverge between them."""
+    epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
+    passes = _accumulate_passes([r.passes_per_epoch for r in resolved],
+                                epochs_per_row, histories.shape[1] - 1)
+    total_updates = epochs_per_row * np.asarray(
+        [r.total for r in resolved], np.int64)
+    return SweepResult(specs=specs, histories=histories,
+                       effective_passes=passes, final_w=final_w,
+                       total_updates=total_updates,
+                       epochs_per_row=epochs_per_row)
 
 
 def run_sweep(obj: LogisticRegression, epochs: int,
@@ -424,7 +572,11 @@ def run_sweep(obj: LogisticRegression, epochs: int,
     axis when one is active (explicit ``mesh=`` or the ambient
     `repro.sharding.context` mesh). Histories/final iterates are
     bit-identical to per-spec `run_asysvrg` / `run_hogwild` calls — sharded
-    or not (XLA:CPU-calibrated; re-validate per backend)."""
+    or not (XLA:CPU-calibrated; re-validate per backend).
+
+    Runners are fetched from the persistent cache in `repro.service.cache`:
+    a repeated sweep with the same static group dims and data shapes
+    compiles nothing."""
     plan = plan_sweep(obj, epochs, specs)
     specs, resolved = plan.specs, plan.resolved
     w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
@@ -434,63 +586,13 @@ def run_sweep(obj: LogisticRegression, epochs: int,
     max_epochs = max(r.epochs for r in resolved)
     histories = np.zeros((C, max_epochs + 1), np.float32)
     final_w = np.zeros((C, obj.p), np.float32)
-    passes = np.zeros((C, max_epochs + 1), np.float64)
-    total_updates = np.zeros((C,), np.int64)
-    epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
 
     for key_, members in plan.groups.items():
-        engine, total, option, buf_len = key_
         group_epochs = plan.group_epochs(key_)
-        keys = jax.vmap(jax.random.PRNGKey)(
-            jnp.asarray([specs[c].seed for c in members]))
-        etas = jnp.asarray([specs[c].step_size for c in members],
-                           jnp.float32)
-        taus_a = jnp.asarray([resolved[c].tau for c in members], jnp.int32)
-        scheme_ids = jnp.asarray([resolved[c].scheme_id for c in members],
-                                 jnp.int32)
-        delay_ids = jnp.asarray([resolved[c].delay_id for c in members],
-                                jnp.int32)
-        row_epochs = jnp.asarray([resolved[c].epochs for c in members],
-                                 jnp.int32)
-        w0_rows = jnp.tile(w_init[None, :], (len(members), 1))
-
-        if engine == _ENGINE_HOGWILD:
-            decays = jnp.asarray([specs[c].decay for c in members],
-                                 jnp.float32)
-            args = (keys, etas, decays, taus_a, scheme_ids, delay_ids,
-                    row_epochs, w0_rows)
-            runner = _hogwild_group_runner(obj.X, obj.y, obj.l2,
-                                           group_epochs, total, buf_len,
-                                           drop_prob, mesh)
-        else:
-            args = (keys, etas, taus_a, scheme_ids, delay_ids, row_epochs,
-                    w0_rows)
-            runner = _asysvrg_group_runner(obj.X, obj.y, obj.l2,
-                                           group_epochs, total, buf_len,
-                                           option, drop_prob, mesh)
-
-        if mesh is not None:
-            # pad the row axis to a multiple of the data-axis size; padded
-            # rows replicate row 0 and are sliced off below
-            args = _pad_rows(args, -len(members) % int(mesh.shape[_DATA_AXIS]))
-        w_fin, hist = runner(*args)
-
-        hist = np.asarray(hist)[:len(members)]
-        w_fin = np.asarray(w_fin)[:len(members)]
+        hist, w_fin = _dispatch_group(obj, specs, resolved, members, key_,
+                                      group_epochs, w_init, drop_prob, mesh)
         for row, c in enumerate(members):
-            e_row = resolved[c].epochs
-            histories[c, :group_epochs + 1] = hist[row]
-            histories[c, group_epochs + 1:] = hist[row, -1]
+            _write_row_history(histories[c], hist[row], group_epochs)
             final_w[c] = w_fin[row]
-            ppe = resolved[c].passes_per_epoch
-            acc = [0.0]
-            for e in range(max_epochs):    # same float accumulation order as
-                nxt = acc[-1] + ppe        # the sequential drivers' loops,
-                acc.append(nxt if e < e_row else acc[-1])  # frozen past e_row
-            passes[c] = acc
-            total_updates[c] = e_row * total
 
-    return SweepResult(specs=specs, histories=histories,
-                       effective_passes=passes, final_w=final_w,
-                       total_updates=total_updates,
-                       epochs_per_row=epochs_per_row)
+    return _assemble_result(specs, resolved, histories, final_w)

@@ -29,6 +29,9 @@ def make_host_mesh():
     return make_mesh((1, 1), ("data", "model"))
 
 
+_SWEEP_MESHES: dict = {}
+
+
 def make_sweep_mesh(num_devices: int | None = None):
     """1-D (`data`,) mesh over the host's devices, for config-row sharding.
 
@@ -38,7 +41,15 @@ def make_sweep_mesh(num_devices: int | None = None):
     local devices on one axis. CI's forced-8-device CPU job and the sharded
     bench smoke both use it; on real hardware pass `make_production_mesh()`
     instead (same axis name, pod-scale device set).
+
+    Memoized per device count: repeated calls (one per service flush, say)
+    return the SAME Mesh object, and `sharding.context.mesh_fingerprint`
+    additionally makes distinct-but-equal meshes share compiled-runner
+    cache entries.
     """
     import jax
     n = num_devices or len(jax.devices())
-    return make_mesh((n,), ("data",))
+    mesh = _SWEEP_MESHES.get(n)
+    if mesh is None:
+        mesh = _SWEEP_MESHES[n] = make_mesh((n,), ("data",))
+    return mesh

@@ -1,0 +1,46 @@
+"""Sweep service: persistent compiled-runner cache + request coalescing.
+
+Three layers turn the one-jit-per-group sweep engine (`repro.core.sweep`)
+from a benchmark harness into a multi-tenant sweep server:
+
+  * `repro.service.cache` — module-level compiled-runner cache (the
+    ROADMAP "sweep-group runner cache" item): runners keyed on the static
+    group dims + data shape, hit/miss/compile counters, zero recompilation
+    for repeated same-shape sweeps.
+  * `repro.service.scheduler` — request coalescing: many clients' spec
+    rows merged into shared compiled groups, demuxed bit-identically.
+  * `repro.service.api` — the `SweepService` front-end (submit / flush /
+    result, `ServiceStats`) plus checkpoint-resumable jobs.
+"""
+from repro.service.api import ServiceStats, SweepService
+from repro.service.cache import (
+    CacheStats,
+    cache_size,
+    cache_stats,
+    clear_cache,
+    get_group_runner,
+    set_cache_limit,
+)
+from repro.service.scheduler import (
+    CoalescedBatch,
+    DispatchInfo,
+    SweepRequest,
+    coalesce,
+    dispatch,
+)
+
+__all__ = [
+    "SweepService",
+    "ServiceStats",
+    "CacheStats",
+    "cache_stats",
+    "cache_size",
+    "clear_cache",
+    "set_cache_limit",
+    "get_group_runner",
+    "SweepRequest",
+    "CoalescedBatch",
+    "DispatchInfo",
+    "coalesce",
+    "dispatch",
+]

@@ -1,0 +1,364 @@
+"""`SweepService` — the multi-tenant front-end over the coalescing
+scheduler and the persistent runner cache.
+
+Usage (the serving loop a production deployment wraps in RPC):
+
+    svc = SweepService(obj, epochs=6)
+    rid_a = svc.submit(client_a_specs)          # admit; nothing runs yet
+    rid_b = svc.submit(client_b_specs, epochs=12)
+    svc.flush()                                 # coalesce + dispatch once
+    res_a = svc.result(rid_a)                   # == run_sweep(obj, 6, a)
+    print(svc.stats())                          # rows coalesced, hit rate…
+
+`submit` only queues; `flush` coalesces every pending request into shared
+compiled groups (repro.service.scheduler) and dispatches them through the
+module-level runner cache (repro.service.cache), so a warm service
+compiles nothing and fills the sharded row axis across tenants.
+``result()`` flushes implicitly if its request is still pending. Each
+request's result is bit-identical to a standalone `run_sweep` of its specs.
+
+Long-running sweeps checkpoint through the existing
+`repro.checkpoint.Checkpointer`: :meth:`run_job` dispatches a job group by
+group, saving partial results atomically after each, and resumes from the
+newest valid checkpoint — a preempted job re-runs only its unfinished
+groups and the final result is still bit-identical to one `run_sweep`
+call. ``max_groups`` bounds one call's work (the graceful-preemption /
+time-slicing hook the tests and the example use).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import zlib
+from collections import OrderedDict
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint import Checkpointer
+from repro.core.objective import LogisticRegression
+from repro.core.sweep import (
+    SweepResult,
+    SweepSpec,
+    _active_mesh,
+    _assemble_result,
+    _dispatch_group,
+    _write_row_history,
+    plan_sweep,
+)
+from repro.service import cache as _cache
+from repro.service.scheduler import SweepRequest, coalesce, dispatch
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceStats:
+    """Service-lifetime accounting. The cache counters cover THIS
+    service's own dispatch windows only (absorbed around each flush /
+    job group), so other tenants sharing the process-global runner cache
+    don't pollute them."""
+    requests_submitted: int
+    requests_completed: int
+    rows_submitted: int
+    rows_coalesced: int          # rows that shared a group across requests
+    groups_dispatched: int
+    groups_merged: int           # dispatched groups holding >1 request
+    flushes: int
+    cache_hits: int
+    cache_misses: int
+    compiles: int
+
+    @property
+    def cache_hit_rate(self) -> float:
+        lookups = self.cache_hits + self.cache_misses
+        return self.cache_hits / lookups if lookups else 0.0
+
+
+class SweepService:
+    """Admit many clients' `SweepSpec` rows, run them as shared compiled
+    groups, hand back per-request results.
+
+    One service instance is bound to one objective (`obj`), one default
+    epoch budget, one ``drop_prob``/``w0`` and one mesh policy — the things
+    `run_sweep` takes as call arguments. ``mesh=None`` re-resolves the
+    ambient `repro.sharding.context` mesh at every flush, so a service
+    created inside a launcher's `mesh_context` shards its dispatches.
+    """
+
+    def __init__(self, obj: LogisticRegression, *, epochs: int = 10,
+                 drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
+                 w0=None, max_results: int = 1024):
+        self.obj = obj
+        self.default_epochs = epochs
+        self.drop_prob = drop_prob
+        self.mesh = mesh
+        self.w0 = w0
+        # queue/id/results/stats mutations hold _lock so concurrent tenant
+        # threads can't mint duplicate ids or lose a submit that races a
+        # flush; the XLA dispatch itself runs OUTSIDE the lock (re-entrant
+        # so helpers can lock themselves when called from either path)
+        self._lock = threading.RLock()
+        # ids detached from the queue but not yet in _results; result()
+        # waits on this condition instead of misreporting a mid-dispatch
+        # request as unknown
+        self._inflight: set = set()
+        self._done_cv = threading.Condition(self._lock)
+        self._data_crc: Optional[int] = None     # memoized X/y digest
+        self._pending: List[SweepRequest] = []
+        # completed results are FIFO-bounded (like the LRU-bounded runner
+        # cache one layer down): a long-lived server must not accumulate
+        # every tenant's histories forever. Clients read soon after flush;
+        # evicted ids raise KeyError like unknown ones.
+        self._results: "OrderedDict[int, SweepResult]" = OrderedDict()
+        self._max_results = max_results
+        self._next_id = 0
+        # service-local cache accounting: global-counter deltas absorbed
+        # around each of THIS service's dispatch windows. Traffic outside
+        # the windows (and clear_cache between flushes) can't pollute the
+        # counters; another service flushing CONCURRENTLY with a window
+        # still can — attribution is per-window, not per-lookup — so treat
+        # the counters as approximate under concurrent multi-service use
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._compiles = 0
+        self._requests_submitted = 0
+        self._requests_completed = 0
+        self._rows_submitted = 0
+        self._rows_coalesced = 0
+        self._groups_dispatched = 0
+        self._groups_merged = 0
+        self._flushes = 0
+
+    # ---------------------------------------------------------------- queue
+    def submit(self, specs: Sequence[SweepSpec],
+               epochs: Optional[int] = None) -> int:
+        """Admit one request (one logical client). Returns its id; nothing
+        executes until `flush` (or a `result` call forces one).
+
+        Specs are VALIDATED here, not at flush: the request is fully
+        planned (normalized AND resolved against the objective, the same
+        `plan_sweep` a flush would run), so an invalid spec — bad
+        algo/scheme/delay, contradictory svrg τ, non-positive epochs or
+        inner-step counts — raises to the submitting client only and can
+        never poison a shared flush (which would wedge every other
+        tenant's pending request).
+        """
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("empty request")
+        default = epochs if epochs is not None else self.default_epochs
+        plan_sweep(self.obj, default, specs)     # raises on any bad spec
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self._pending.append(SweepRequest(
+                request_id=rid, specs=specs, epochs=default))
+            self._requests_submitted += 1
+            self._rows_submitted += len(specs)
+        return rid
+
+    def _absorb_cache_delta(self, base: "_cache.CacheStats") -> None:
+        """Fold one dispatch window's cache counter movement into the
+        service-local totals (clamped: a concurrent `clear_cache` mid-window
+        must not produce negative counts)."""
+        delta = _cache.cache_stats().since(base)
+        with self._lock:
+            self._cache_hits += max(0, delta.hits)
+            self._cache_misses += max(0, delta.misses)
+            self._compiles += max(0, delta.compiles)
+
+    def flush(self) -> List[int]:
+        """Coalesce + dispatch every pending request; returns their ids.
+
+        The queue is detached BEFORE dispatch (one atomic swap), so a
+        request submitted while the XLA work runs lands in the fresh queue
+        for the next flush instead of being silently dropped by a
+        post-dispatch clear; if dispatch fails the detached requests are
+        re-queued rather than lost."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+            self._inflight.update(r.request_id for r in pending)
+        if not pending:
+            return []
+        batch = coalesce(self.obj, tuple(pending))
+        base = _cache.cache_stats()
+        try:
+            results, info = dispatch(self.obj, batch, w0=self.w0,
+                                     drop_prob=self.drop_prob,
+                                     mesh=_active_mesh(self.mesh))
+        except Exception:
+            with self._lock:
+                self._pending = pending + self._pending
+                self._inflight.difference_update(
+                    r.request_id for r in pending)
+                self._done_cv.notify_all()
+            raise
+        with self._lock:
+            self._absorb_cache_delta(base)
+            self._results.update(results)
+            while len(self._results) > self._max_results:
+                self._results.popitem(last=False)    # evict oldest
+            self._inflight.difference_update(results)
+            self._requests_completed += len(results)
+            self._rows_coalesced += info.rows_coalesced
+            self._groups_dispatched += info.groups_dispatched
+            self._groups_merged += info.groups_merged
+            self._flushes += 1
+            self._done_cv.notify_all()
+        return sorted(results)
+
+    def result(self, request_id: int) -> SweepResult:
+        """This request's `SweepResult` (bit-identical to a standalone
+        `run_sweep` of its specs). Flushes first if it is still queued,
+        and WAITS if another thread's flush has the request in flight.
+        Raises KeyError for unknown ids — including results already
+        evicted past the ``max_results`` retention bound."""
+        while True:
+            with self._done_cv:                # shares the service lock
+                if request_id in self._results:
+                    return self._results[request_id]
+                if request_id in self._inflight:
+                    self._done_cv.wait()
+                    continue
+                queued = any(r.request_id == request_id
+                             for r in self._pending)
+            if queued:
+                self.flush()
+                continue
+            raise KeyError(f"unknown request id {request_id}")
+
+    def discard(self, request_id: int) -> None:
+        """Release a completed result early (no-op if absent) — the
+        explicit retention hook for clients that have consumed it."""
+        with self._lock:
+            self._results.pop(request_id, None)
+
+    def sweep(self, specs: Sequence[SweepSpec],
+              epochs: Optional[int] = None) -> SweepResult:
+        """submit + flush + result in one call (the single-tenant path —
+        still coalesced with anything already queued, still cache-warm)."""
+        return self.result(self.submit(specs, epochs))
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> ServiceStats:
+        with self._lock:
+            return ServiceStats(
+                requests_submitted=self._requests_submitted,
+                requests_completed=self._requests_completed,
+                rows_submitted=self._rows_submitted,
+                rows_coalesced=self._rows_coalesced,
+                groups_dispatched=self._groups_dispatched,
+                groups_merged=self._groups_merged,
+                flushes=self._flushes,
+                cache_hits=self._cache_hits,
+                cache_misses=self._cache_misses,
+                compiles=self._compiles)
+
+    # ------------------------------------------------------ checkpointed job
+    def _dataset_crc(self) -> int:
+        """CRC of the objective's X/y bytes, computed once per service
+        (the objective is immutable for the service's lifetime)."""
+        with self._lock:
+            if self._data_crc is None:
+                crc = 0
+                for arr in (self.obj.X, self.obj.y):
+                    arr = np.ascontiguousarray(np.asarray(arr))
+                    crc = zlib.crc32(arr.tobytes(), crc)
+                self._data_crc = crc
+            return self._data_crc
+
+    def run_job(self, specs: Sequence[SweepSpec],
+                epochs: Optional[int] = None, *,
+                checkpointer: Checkpointer,
+                max_groups: Optional[int] = None,
+                ) -> Tuple[Optional[SweepResult], bool]:
+        """Run one long sweep group-by-group with checkpoint-resume.
+
+        After every dispatched group the partial result is saved through
+        ``checkpointer`` (atomic rename — a crash mid-job loses at most the
+        in-flight group). A rerun with the same specs/epochs restores the
+        newest checkpoint and dispatches only the unfinished groups; a
+        fingerprint of the resolved plan guards against resuming a
+        DIFFERENT job from the same directory. ``max_groups`` caps how many
+        groups this call dispatches (preemption budget).
+
+        Returns ``(result, done)`` — ``result`` is None until every group
+        has run, then bit-identical to ``run_sweep(obj, epochs, specs)``.
+        """
+        epochs = epochs if epochs is not None else self.default_epochs
+        plan = plan_sweep(self.obj, epochs, specs)
+        group_items = list(plan.groups.items())
+        resolved = plan.resolved
+        C = len(plan.specs)
+        max_epochs = max(r.epochs for r in resolved)
+        epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
+        # the fingerprint pins the RESOLVED plan AND the numeric inputs:
+        # specs + epochs + drop_prob + the actual X/y/w0/l2 bytes. Groups
+        # checkpointed from one starting point or dataset must never be
+        # blended with groups resumed under another (same-shape data or a
+        # different w0 would otherwise slip through). The X/y digest is
+        # memoized per service: a preemption loop calling run_job once per
+        # group hashes the dataset once, not once per call.
+        w0_arr = (np.zeros(self.obj.p, np.float32) if self.w0 is None
+                  else np.asarray(self.w0))
+        fp = zlib.crc32(repr((plan.specs, tuple(epochs_per_row.tolist()),
+                              self.drop_prob,
+                              self._dataset_crc())).encode())
+        for arr in (w0_arr, np.float32(self.obj.l2)):
+            fp = zlib.crc32(np.ascontiguousarray(arr).tobytes(), fp)
+
+        state = {
+            "histories": np.zeros((C, max_epochs + 1), np.float32),
+            "final_w": np.zeros((C, self.obj.p), np.float32),
+            "done": np.zeros((len(group_items),), np.int8),
+            "fingerprint": np.asarray(fp, np.int64),
+        }
+        try:
+            state, _ = checkpointer.restore(state)
+        except FileNotFoundError:
+            pass                                 # fresh job
+        except (KeyError, ValueError) as e:
+            # same directory, different tree/shapes: a different job
+            raise ValueError(
+                f"checkpoint directory {checkpointer.dir!r} holds a "
+                f"different job (incompatible checkpoint: {e})") from e
+        else:
+            if int(state["fingerprint"]) != fp:
+                raise ValueError(
+                    "checkpoint directory holds a different job "
+                    f"(fingerprint {int(state['fingerprint'])} != {fp})")
+
+        w_init = (jnp.zeros(self.obj.p) if self.w0 is None
+                  else jnp.asarray(self.w0))
+        mesh = _active_mesh(self.mesh)
+        dispatched = 0
+        base = _cache.cache_stats()
+        for gi, (key_, members) in enumerate(group_items):
+            if state["done"][gi]:
+                continue
+            if max_groups is not None and dispatched >= max_groups:
+                self._absorb_cache_delta(base)
+                return None, False
+            group_epochs = plan.group_epochs(key_)
+            hist, w_fin = _dispatch_group(self.obj, plan.specs, resolved,
+                                          members, key_, group_epochs,
+                                          w_init, self.drop_prob, mesh)
+            for row, c in enumerate(members):
+                _write_row_history(state["histories"][c], hist[row],
+                                   group_epochs)
+                state["final_w"][c] = w_fin[row]
+            state["done"][gi] = 1
+            dispatched += 1
+            with self._lock:
+                self._groups_dispatched += 1
+            checkpointer.save(state, step=int(state["done"].sum()),
+                              extra={"job_fingerprint": int(fp),
+                                     "groups_total": len(group_items)})
+        self._absorb_cache_delta(base)
+        return _assemble_result(plan.specs, resolved, state["histories"],
+                                state["final_w"]), True

@@ -1,0 +1,173 @@
+"""Persistent compiled-runner cache — the ROADMAP "sweep-group runner
+cache" item, closed.
+
+Before this module, every `run_sweep` call rebuilt its jitted group runners
+from fresh closures: the closure captured `X`/`y` and a new function object
+per call, which defeats JAX's jit cache, so a service re-running the same
+grid paid full XLA recompilation per call — the regime the paper's
+"compute cost per effective pass" framing targets. The group bodies now
+close over hashable statics only (`repro.core.sweep._group_fn`; data and
+row arrays enter as runtime arguments) and THIS module owns the one place
+they are jitted: a module-level dict keyed on everything that determines
+the compiled program —
+
+    (engine, M̃, option, buf_len, epochs-bound, drop_prob,
+     mesh fingerprint, X/y shape + dtype)
+
+A repeated same-shape sweep — direct `run_sweep` or through the
+`repro.service.api.SweepService` — fetches the SAME jitted callable and
+compiles nothing. Compiles are counted by a wrapper that increments a
+counter at TRACE time (the Python body only runs when jit traces), which is
+version-independent and exactly counts (re)compilations; hit/miss counters
+cover the cache itself. `tests/test_service.py` pins the regression: a
+second same-shape sweep performs zero new traces.
+
+The cache is process-global on purpose — many logical clients / services
+in one process (the multi-tenant sweep server) share compiled programs —
+and LRU-BOUNDED (`set_cache_limit`, default 64 runners) so tenants rotating
+through shapes cannot grow the executable set without bound. `clear_cache()`
+exists for tests and for dropping device buffers referenced by cached
+executables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core import sweep as _sweep
+from repro.sharding.context import mesh_fingerprint
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """Snapshot of the runner cache counters (monotonic since process start
+    or the last `clear_cache(reset_stats=True)`)."""
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        lookups = self.hits + self.misses
+        return self.hits / lookups if lookups else 0.0
+
+    def since(self, base: "CacheStats") -> "CacheStats":
+        """Counter deltas relative to an earlier snapshot."""
+        return CacheStats(hits=self.hits - base.hits,
+                          misses=self.misses - base.misses,
+                          compiles=self.compiles - base.compiles)
+
+
+class _Counters:
+    def __init__(self):
+        self.hits = 0
+        self.misses = 0
+        self.compiles = 0
+
+
+_LOCK = threading.Lock()
+_RUNNERS: "OrderedDict[tuple, object]" = OrderedDict()
+_COUNTERS = _Counters()
+# LRU bound: a long-lived multi-tenant service must not accumulate XLA
+# executables forever as tenants rotate through shapes. 64 runners is an
+# order of magnitude above any one workload's live set (a grid is a few
+# groups; a tenant fleet a few dozen); callers holding an evicted runner
+# keep using it — eviction only drops the SHARED reference.
+_MAX_RUNNERS = 64
+
+_RunnerKey = Tuple  # (engine, M̃, option, buf_len, epochs, drop_prob,
+#                     mesh fingerprint, X shape, X dtype, y shape, y dtype)
+
+
+def runner_key(engine: str, *, group_epochs: int, total: int, option: int,
+               buf_len: int, drop_prob: float, mesh: Optional[Mesh],
+               X, y) -> _RunnerKey:
+    """Everything that determines the compiled program. Data enters the
+    runner as an argument, so only its SHAPE/DTYPE is keyed — two tenants
+    sweeping same-shape datasets share one compiled program."""
+    return (engine, int(total), int(option), int(buf_len), int(group_epochs),
+            float(drop_prob), mesh_fingerprint(mesh),
+            tuple(X.shape), str(X.dtype), tuple(y.shape), str(y.dtype))
+
+
+def _counted(fn):
+    """Increment the compile counter at trace time: the wrapper body runs
+    exactly once per jit (re)trace, never on a cached execution. Tracing
+    happens when the cached runner is CALLED (no lock held), so taking
+    _LOCK here cannot deadlock with `get_group_runner`."""
+    def traced(*args):
+        with _LOCK:
+            _COUNTERS.compiles += 1
+        return fn(*args)
+    return traced
+
+
+def get_group_runner(engine: str, *, group_epochs: int, total: int,
+                     option: int, buf_len: int, drop_prob: float,
+                     mesh: Optional[Mesh], X, y):
+    """The jitted runner for one (engine, M̃, option, buf_len, …) group,
+    built at most once per key.
+
+    The returned callable takes ``(X, y, l2, *row_args)`` with every row
+    array row-leading; under a mesh it is shard_mapped over the `data` axis
+    (data args replicated) before jitting — see
+    `repro.core.sweep._shard_group_fn` for the bit-exactness argument.
+    """
+    key = runner_key(engine, group_epochs=group_epochs, total=total,
+                     option=option, buf_len=buf_len, drop_prob=drop_prob,
+                     mesh=mesh, X=X, y=y)
+    with _LOCK:
+        runner = _RUNNERS.get(key)
+        if runner is not None:
+            _COUNTERS.hits += 1
+            _RUNNERS.move_to_end(key)            # LRU touch
+            return runner
+        _COUNTERS.misses += 1
+        fn, num_row = _sweep._group_fn(engine, epochs=group_epochs,
+                                       total=total, buf_len=buf_len,
+                                       option=option, drop_prob=drop_prob)
+        if mesh is not None:
+            fn = _sweep._shard_group_fn(fn, mesh, num_row)
+        runner = jax.jit(_counted(fn))
+        _RUNNERS[key] = runner
+        while len(_RUNNERS) > _MAX_RUNNERS:
+            _RUNNERS.popitem(last=False)         # evict least recently used
+        return runner
+
+
+def cache_stats() -> CacheStats:
+    """Current hit/miss/compile counters (a frozen snapshot)."""
+    with _LOCK:
+        return CacheStats(hits=_COUNTERS.hits, misses=_COUNTERS.misses,
+                          compiles=_COUNTERS.compiles)
+
+
+def cache_size() -> int:
+    with _LOCK:
+        return len(_RUNNERS)
+
+
+def clear_cache(reset_stats: bool = True) -> None:
+    """Drop every cached runner (tests; or to release executables)."""
+    with _LOCK:
+        _RUNNERS.clear()
+        if reset_stats:
+            _COUNTERS.hits = _COUNTERS.misses = _COUNTERS.compiles = 0
+
+
+def set_cache_limit(max_runners: int) -> int:
+    """Set the LRU bound on cached runners; returns the previous bound.
+    Deployments with many concurrent shapes raise it; tests shrink it."""
+    global _MAX_RUNNERS
+    if max_runners < 1:
+        raise ValueError(f"cache limit must be >= 1, got {max_runners}")
+    with _LOCK:
+        prev, _MAX_RUNNERS = _MAX_RUNNERS, max_runners
+        while len(_RUNNERS) > _MAX_RUNNERS:
+            _RUNNERS.popitem(last=False)
+    return prev

@@ -1,0 +1,169 @@
+"""Request coalescing: many clients' sweep specs, one compiled dispatch.
+
+A sweep service sees many small requests — different tenants probing the
+same (engine, M̃, option, buf_len) program shape with different seeds /
+steps / τ. Dispatching each request alone wastes the engine's one-jit-per-
+group batching: a 3-row request runs a 3-row vmap even though ten other
+requests want the same compiled program. This module merges compatible rows
+ACROSS requests into shared groups before dispatch:
+
+  * every pending request is planned independently (`plan_sweep` — the same
+    normalization/resolution a standalone `run_sweep` performs, so what a
+    request *means* never depends on its neighbours);
+  * rows from all requests are pooled by the same static group key the
+    engine compiles on, filling the (sharded) row axis of one runner call —
+    only the remainder of the device-count multiple is padding, instead of
+    per-request padding;
+  * each merged group runs ONCE through the persistent runner cache
+    (`repro.service.cache`), scanning to the merged members' max epoch
+    budget — shorter rows freeze under the masked-epoch semantics;
+  * per-row results are demultiplexed back to their requests.
+
+Bit-exactness: a request's demuxed `SweepResult` is BIT-IDENTICAL to a
+standalone ``run_sweep(obj, request.epochs, request.specs)``. This follows
+from two already-tested engine contracts — per-row bits are independent of
+the vmap batch composition (vmap-bitwise-stable reductions; the sharding
+padding relies on the same fact), and a row scanned past its budget
+freezes bit-exactly (carry passthrough + masked loss writes re-emit the
+last live loss, so history entries beyond the row's budget carry the same
+frozen value whatever the group's scan bound). tests/test_service.py and
+tests/test_sweep_sharded.py assert the end-to-end equality, unsharded and
+under a forced 8-device mesh.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.objective import LogisticRegression
+from repro.core.sweep import (
+    SweepPlan,
+    SweepResult,
+    SweepSpec,
+    _assemble_result,
+    _dispatch_group,
+    _write_row_history,
+    plan_sweep,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRequest:
+    """One logical client's sweep: its spec rows + its default epoch budget
+    (per-row ``SweepSpec.epochs`` overrides ride along unchanged)."""
+    request_id: int
+    specs: Tuple[SweepSpec, ...]
+    epochs: int
+
+
+class _RequestPlan(NamedTuple):
+    request: SweepRequest
+    plan: SweepPlan
+    offset: int                 # this request's first row in the flat batch
+
+
+class CoalescedBatch(NamedTuple):
+    """The merged execution plan for one flush.
+
+    ``specs``/``resolved`` are the requests' normalized rows concatenated in
+    admission order; ``groups`` pools flat row indices by the engine's
+    static group key, ACROSS requests.
+    """
+    request_plans: Tuple[_RequestPlan, ...]
+    specs: tuple
+    resolved: tuple
+    groups: Dict[tuple, List[int]]
+
+    def group_epochs(self, key: tuple) -> int:
+        """A merged group's static scan bound: max over ALL pooled rows."""
+        return max(self.resolved[c].epochs for c in self.groups[key])
+
+
+class DispatchInfo(NamedTuple):
+    """What one flush did, for `ServiceStats` accounting."""
+    groups_dispatched: int
+    rows_dispatched: int
+    rows_coalesced: int      # rows that shared a group with another request
+    groups_merged: int       # groups holding rows from >1 request
+
+
+def coalesce(obj: LogisticRegression,
+             requests: Sequence[SweepRequest]) -> CoalescedBatch:
+    """Plan every request independently, then pool rows by group key."""
+    if not requests:
+        raise ValueError("nothing to coalesce: no pending requests")
+    request_plans: List[_RequestPlan] = []
+    specs: list = []
+    resolved: list = []
+    groups: Dict[tuple, List[int]] = {}
+    offset = 0
+    for req in requests:
+        plan = plan_sweep(obj, req.epochs, req.specs)
+        request_plans.append(_RequestPlan(req, plan, offset))
+        for key, members in plan.groups.items():
+            groups.setdefault(key, []).extend(offset + c for c in members)
+        specs.extend(plan.specs)
+        resolved.extend(plan.resolved)
+        offset += len(plan.specs)
+    return CoalescedBatch(request_plans=tuple(request_plans),
+                          specs=tuple(specs), resolved=tuple(resolved),
+                          groups=groups)
+
+
+def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
+             drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
+             ) -> Tuple[Dict[int, SweepResult], DispatchInfo]:
+    """Run every merged group once, demux per-request `SweepResult`s.
+
+    Returns ``({request_id: result}, DispatchInfo)``; each result is
+    bit-identical to a standalone `run_sweep` of that request's specs with
+    the same ``w0``/``drop_prob``/``mesh``.
+    """
+    specs, resolved = batch.specs, batch.resolved
+    w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+
+    # per-request output buffers at the REQUEST's own history width (its
+    # rows' max epoch budget), exactly like a standalone run_sweep
+    buffers = []
+    for rp in batch.request_plans:
+        e_rows = np.asarray([r.epochs for r in rp.plan.resolved], np.int64)
+        width = int(e_rows.max()) + 1
+        buffers.append((np.zeros((len(rp.plan.specs), width), np.float32),
+                        np.zeros((len(rp.plan.specs), obj.p), np.float32),
+                        e_rows))
+    offsets = [rp.offset for rp in batch.request_plans]
+
+    rows_coalesced = 0
+    groups_merged = 0
+    for key_, members in batch.groups.items():
+        group_epochs = batch.group_epochs(key_)
+        hist, w_fin = _dispatch_group(obj, specs, resolved, members, key_,
+                                      group_epochs, w_init, drop_prob, mesh)
+        owners = {bisect.bisect_right(offsets, c) - 1 for c in members}
+        if len(owners) > 1:
+            groups_merged += 1
+            rows_coalesced += len(members)
+        for row, c in enumerate(members):
+            ri = bisect.bisect_right(offsets, c) - 1
+            local = c - offsets[ri]
+            hists, finals, _ = buffers[ri]
+            # the merged bound may exceed (or undercut) the request's own
+            # history width; _write_row_history trims/pads bit-exactly
+            _write_row_history(hists[local], hist[row], group_epochs)
+            finals[local] = w_fin[row]
+
+    results: Dict[int, SweepResult] = {}
+    for rp, (hists, finals, _) in zip(batch.request_plans, buffers):
+        results[rp.request.request_id] = _assemble_result(
+            rp.plan.specs, rp.plan.resolved, hists, finals)
+
+    info = DispatchInfo(groups_dispatched=len(batch.groups),
+                        rows_dispatched=len(specs),
+                        rows_coalesced=rows_coalesced,
+                        groups_merged=groups_merged)
+    return results, info

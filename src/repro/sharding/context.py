@@ -36,6 +36,22 @@ def current_mesh() -> Optional[Mesh]:
     return getattr(_state, "mesh", None)
 
 
+def mesh_fingerprint(mesh: Optional[Mesh]):
+    """Hashable identity of a mesh for cache keying (None for no mesh).
+
+    Two Mesh OBJECTS built over the same devices/axes (e.g. repeated
+    `make_sweep_mesh()` calls, or the ambient `mesh_context` mesh vs an
+    explicit `mesh=`) fingerprint equal, so the compiled-runner cache in
+    `repro.service.cache` shares one entry across them instead of keying on
+    object identity.
+    """
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(int(s) for s in mesh.devices.shape),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
 def current_rules():
     return getattr(_state, "rules", DEFAULT_RULES)
 

@@ -143,6 +143,41 @@ def test_ambient_mesh_context_shards(obj, mesh):
     _assert_same(explicit, ambient)
 
 
+def test_service_coalescing_sharded_bit_identical(obj, mesh):
+    """The sweep service under a forced 8-device mesh: multi-request
+    coalescing (all three algos, mixed per-row epochs, row counts needing
+    padding) demuxes bit-identical to standalone `run_sweep` — sharded AND
+    unsharded — and the second flush of the same shapes compiles nothing."""
+    from repro.service import SweepService, cache_stats
+
+    req_a = [SweepSpec(scheme=SCHEMES[c % 3], step_size=0.5, tau=3,
+                       num_threads=4, inner_steps=25, seed=c)
+             for c in range(3)]
+    req_b = [SweepSpec(scheme="unlock", step_size=0.25, tau=3,
+                       num_threads=4, inner_steps=25, seed=9, epochs=1),
+             SweepSpec(algo="hogwild", scheme="consistent", step_size=0.5,
+                       tau=2, num_threads=3, seed=2),
+             SweepSpec(algo="svrg", step_size=0.5, num_threads=1,
+                       inner_steps=30, seed=5)]
+
+    svc = SweepService(obj, epochs=2, mesh=mesh)
+    rid_a, rid_b = svc.submit(req_a), svc.submit(req_b)
+    svc.flush()
+    for rid, specs in ((rid_a, req_a), (rid_b, req_b)):
+        sharded = run_sweep(obj, 2, specs, mesh=mesh)
+        unsharded = run_sweep(obj, 2, specs)
+        got = svc.result(rid)
+        _assert_same(got, sharded)
+        _assert_same(got, unsharded)
+    assert svc.stats().rows_coalesced > 0
+
+    base = cache_stats()
+    svc.submit(req_a)
+    svc.submit(req_b)
+    svc.flush()
+    assert cache_stats().since(base).compiles == 0
+
+
 def test_model_axis_mesh_degrades_to_unsharded(obj):
     """A mesh without a >1 `data` axis (e.g. the 1×1 host mesh) falls back
     to the single-device path rather than erroring."""
