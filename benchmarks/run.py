@@ -14,12 +14,13 @@ def main() -> None:
     quick = "--full" not in sys.argv
     from benchmarks import (fig1_convergence, fig1_speedup,
                             frontier_stability, roofline_report,
-                            service_throughput, table2_schemes,
-                            table3_vs_hogwild)
+                            server_latency, service_throughput,
+                            table2_schemes, table3_vs_hogwild)
     table2_schemes.main(quick=quick)
     table3_vs_hogwild.main(quick=quick)
     frontier_stability.main(quick=quick)
     service_throughput.main(quick=quick)
+    server_latency.main(quick=quick)
     fig1_speedup.main(quick=quick)
     fig1_convergence.main(quick=quick)
     roofline_report.main(quick=quick)

@@ -1,0 +1,179 @@
+"""Serving-tier latency/throughput: eager per-request flush vs the
+background daemon's deadline-coalesced batching, over real HTTP.
+
+The experiment the async serving tier exists for: K closed-loop tenants
+(each submits, waits for its result, repeats) drive one in-process
+`SweepServer` through the stdlib HTTP client, at several offered loads
+(tenant counts). Two serving policies:
+
+  * EAGER — no flush daemon; every submit is followed by POST /flush, the
+    synchronous-coordination baseline. No cross-tenant coalescing, and
+    whatever batch width each flush happens to catch is the width XLA
+    traces (drifting widths retrace even on a runner-cache hit).
+  * DEADLINE-COALESCED — `FlushPolicy(max_delay_ms=…, stable_widths=True)`:
+    submits return immediately, the daemon flushes the merged batch when
+    the deadline (or size bound) fires, and the width registry pads merged
+    groups to previously-compiled widths so the warm path stays at
+    0 compiles.
+
+Reported per (mode, load): p50/p95/mean request latency (client-side
+submit→result), rows/s throughput, flushes, compiles during the measured
+phase. Acceptance (asserted at the max load, after per-mode warm-up):
+deadline-coalesced throughput ≥ 2× eager, with 0 compiles in the measured
+coalesced phase. Writes ``BENCH_server_latency.json``; ``--quick`` is the
+CI `server-smoke` configuration.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from benchmarks.artifacts import write_bench_json
+from repro.core import LogisticRegression, SweepSpec
+from repro.data.libsvm import make_synthetic_libsvm
+from repro.server import FlushPolicy, SweepClient, SweepServer
+from repro.server.metrics import percentile
+from repro.service import SweepService, cache_stats
+
+MAX_TENANTS = 6
+ROWS_PER_REQUEST = 4
+ACCEPT_SPEEDUP = 2.0
+
+
+def _tenant_specs(tenant: int, round_: int) -> list:
+    """One compatible 4-row probe (same static dims across tenants, own
+    seeds) — the many-small-clients regime coalescing targets."""
+    return [SweepSpec(scheme=("consistent", "inconsistent", "unlock")[c % 3],
+                      step_size=(0.25, 0.5)[c % 2], tau=3, num_threads=4,
+                      inner_steps=25, seed=10_000 * tenant + 10 * round_ + c)
+            for c in range(ROWS_PER_REQUEST)]
+
+
+def _drive(url: str, tenants: int, rounds: int, eager: bool):
+    """Run the closed-loop tenant fleet; returns per-request latencies."""
+    latencies, errors = [], []
+    lock = threading.Lock()
+
+    def tenant_loop(t: int):
+        client = SweepClient(url, poll_s=5.0)
+        try:
+            for r in range(rounds):
+                t0 = time.perf_counter()
+                rid = client.submit(_tenant_specs(t, r), tenant=f"t{t}")
+                if eager:
+                    client.flush()
+                client.result(rid, timeout=600)
+                dt = time.perf_counter() - t0
+                with lock:
+                    latencies.append(dt)
+        except Exception as e:               # surface, don't hang the fleet
+            with lock:
+                errors.append(e)
+
+    threads = [threading.Thread(target=tenant_loop, args=(t,))
+               for t in range(tenants)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return latencies, wall
+
+
+def _measure(obj, epochs: int, tenants: int, rounds: int, eager: bool,
+             max_delay_ms: float) -> dict:
+    """One (mode, load) cell: fresh service + server, one warm-up wave
+    (compiles + records widths), then the measured closed-loop phase."""
+    svc = SweepService(obj, epochs=epochs)
+    policy = (None if eager else
+              FlushPolicy(max_rows=tenants * ROWS_PER_REQUEST,
+                          max_delay_ms=max_delay_ms,
+                          stable_widths=True, max_pad_factor=16.0))
+    with SweepServer(svc, policy=policy) as server:
+        _drive(server.url, tenants, 1, eager)          # warm-up wave
+        base = cache_stats()
+        latencies, wall = _drive(server.url, tenants, rounds, eager)
+        delta = cache_stats().since(base)
+        stats = svc.stats()
+    n_requests = tenants * rounds
+    rows = n_requests * ROWS_PER_REQUEST
+    return {
+        "mode": "eager" if eager else "coalesced",
+        "tenants": tenants, "rounds": rounds, "requests": n_requests,
+        "rows": rows,
+        "wall_s": wall,
+        "rows_per_s": rows / wall,
+        "latency_p50_ms": percentile(latencies, 50) * 1e3,
+        "latency_p95_ms": percentile(latencies, 95) * 1e3,
+        "latency_mean_ms": sum(latencies) / len(latencies) * 1e3,
+        "compiles_measured": delta.compiles,
+        "flushes": stats.flushes,
+        "rows_coalesced": stats.rows_coalesced,
+        "rows_padded": stats.rows_padded,
+        "cache_hit_rate": stats.cache_hit_rate,
+    }
+
+
+def run(quick: bool = False):
+    ds = make_synthetic_libsvm("real-sim", seed=11,
+                               scale=0.002 if quick else 0.01)
+    obj = LogisticRegression(ds.X, ds.y, l2_reg=1e-3)
+    epochs = 2 if quick else 4
+    rounds = 3 if quick else 6
+    loads = (2, MAX_TENANTS) if quick else (1, 2, 4, MAX_TENANTS)
+    max_delay_ms = 20.0
+
+    cells = []
+    for tenants in loads:
+        for eager in (True, False):
+            cells.append(_measure(obj, epochs, tenants, rounds, eager,
+                                  max_delay_ms))
+
+    top = {c["mode"]: c for c in cells if c["tenants"] == MAX_TENANTS}
+    speedup = top["coalesced"]["rows_per_s"] / top["eager"]["rows_per_s"]
+    out = {
+        "dataset": "real-sim", "epochs": epochs,
+        "rows_per_request": ROWS_PER_REQUEST,
+        "max_delay_ms": max_delay_ms,
+        "loads": list(loads), "cells": cells,
+        "coalesced_speedup_at_max_load": speedup,
+        "coalesced_compiles_at_max_load": top["coalesced"][
+            "compiles_measured"],
+    }
+    # acceptance: deadline coalescing must beat eager serving >= 2x at the
+    # full tenant fleet, on a warm cache with zero measured compiles
+    if top["coalesced"]["compiles_measured"]:
+        raise AssertionError(
+            "warm coalesced serving recompiled "
+            f"({top['coalesced']['compiles_measured']} traces) — stable-"
+            "width regression")
+    if speedup < ACCEPT_SPEEDUP:
+        raise AssertionError(
+            f"deadline-coalesced serving only {speedup:.2f}x eager at "
+            f"{MAX_TENANTS} tenants (acceptance: >= {ACCEPT_SPEEDUP}x)")
+    return out
+
+
+def main(quick: bool = True):
+    out = run(quick=quick)
+    write_bench_json("server_latency", out)
+    print("name,us_per_call,derived")
+    for c in out["cells"]:
+        print(f"server_{c['mode']}_{c['tenants']}tenants,"
+              f"{c['latency_p50_ms'] * 1e3:.1f},"
+              f"p95_ms={c['latency_p95_ms']:.1f};"
+              f"rows_per_s={c['rows_per_s']:.1f};"
+              f"compiles={c['compiles_measured']};"
+              f"flushes={c['flushes']}")
+    print(f"server_coalesced_speedup,"
+          f"{out['coalesced_speedup_at_max_load']:.2f},"
+          f"at_{MAX_TENANTS}_tenants;warm_compiles="
+          f"{out['coalesced_compiles_at_max_load']}")
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv)

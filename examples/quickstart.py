@@ -14,17 +14,21 @@ host, pass ``mesh=make_sweep_mesh()`` to shard the rows across devices.
 
 Serving sweeps: re-running grids is as cheap as running them — every
 dispatch goes through the persistent compiled-runner cache
-(`repro.service.cache`), so a second same-shape sweep compiles nothing,
-and `repro.service.SweepService` coalesces many clients' specs into
-shared compiled groups (see the "serving sweeps" section below and
-examples/sweep_service.py for the full multi-tenant + checkpoint-resume
-demo).
+(`repro.service.cache`), so a second same-shape sweep compiles nothing —
+and the serving tier (`repro.server`) makes the whole thing a deployable
+HTTP service: clients submit over the wire and a background flush daemon
+coalesces tenants' specs into shared compiled dispatches on a deadline
+policy, nobody ever calling flush() (see the "serving sweeps" section
+below; examples/serve_sweeps.py is the full multi-tenant demo with
+priorities and a time-sliced giant job, examples/sweep_service.py the
+in-process + checkpoint-resume one).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import (LogisticRegression, SweepSpec, make_grid, run_sweep,
                         svrg_sweep_spec)
 from repro.data.libsvm import make_synthetic_libsvm
+from repro.server import FlushPolicy, SweepClient, SweepServer
 from repro.service import SweepService, cache_stats
 
 
@@ -56,33 +60,41 @@ def main():
     print("\nAsySVRG reaches a much smaller gap at EQUAL effective passes —")
     print("the paper's Figure 1 (right) in one table, from one compile-set.")
 
-    # ---- serving sweeps: the same shapes again, as a service would run
-    # them. Two clients probe around the winner; their 2+1 rows coalesce
+    # ---- serving sweeps: the same shapes again, served over HTTP. Two
+    # tenants submit to a SweepServer and simply wait: the background
+    # flush daemon's 25ms deadline fires once, their 2+1 rows coalesce
     # into ONE 3-row compiled group — the exact shape the 3-scheme grid
-    # above already compiled — so the flush fetches the cached runner and
-    # compiles NOTHING.
+    # above already compiled — so the dispatch fetches the cached runner
+    # and compiles NOTHING. Results come back over the wire bit-identical
+    # to an in-process run_sweep.
     base = cache_stats()
-    svc = SweepService(obj, epochs=6)
-    rid_a = svc.submit(make_grid(schemes=("inconsistent",), seeds=(1, 2),
-                                 step_sizes=(2.0,), taus=(9,),
-                                 num_threads=10))
-    rid_b = svc.submit(make_grid(schemes=("unlock",), seeds=(3,),
-                                 step_sizes=(1.0,), taus=(9,),
-                                 num_threads=10))
-    svc.flush()
-    s = svc.stats()
+    with SweepServer(SweepService(obj, epochs=6),
+                     policy=FlushPolicy(max_rows=24,
+                                        max_delay_ms=25)) as server:
+        client = SweepClient(server.url)
+        rid_a = client.submit(make_grid(schemes=("inconsistent",),
+                                        seeds=(1, 2), step_sizes=(2.0,),
+                                        taus=(9,), num_threads=10),
+                              tenant="team-a")
+        rid_b = client.submit(make_grid(schemes=("unlock",), seeds=(3,),
+                                        step_sizes=(1.0,), taus=(9,),
+                                        num_threads=10), tenant="team-b")
 
-    def best_gap(res):
-        return min(res.curve(c)[1][-1] - f_star
-                   for c in range(len(res.specs)))
+        def best_gap(res):
+            return min(res.curve(c)[1][-1] - f_star
+                       for c in range(len(res.specs)))
 
-    gap_a = best_gap(svc.result(rid_a))
-    gap_b = best_gap(svc.result(rid_b))
-    print(f"\nserving sweeps: 2 clients, {s.rows_submitted} rows -> "
-          f"{s.groups_dispatched} compiled group(s), "
-          f"{s.rows_coalesced} rows coalesced, "
-          f"{cache_stats().since(base).compiles} new compile(s)")
-    print(f"  client A best gap {gap_a:.3e}, client B best gap {gap_b:.3e}"
+        gap_a = best_gap(client.result(rid_a, timeout=600))
+        gap_b = best_gap(client.result(rid_b, timeout=600))
+        stats = client.stats()
+
+    s, q = stats["service"], stats["request_latency"]
+    print(f"\nserving sweeps over HTTP: 2 tenants, {s['rows_submitted']} "
+          f"rows -> {s['flushes']} deadline flush, "
+          f"{s['rows_coalesced']} rows coalesced, "
+          f"{cache_stats().since(base).compiles} new compile(s), "
+          f"request p95 {q['p95_ms']:.0f} ms")
+    print(f"  team-a best gap {gap_a:.3e}, team-b best gap {gap_b:.3e}"
           "  (each bit-identical to its own run_sweep)")
 
 

@@ -69,6 +69,15 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
 
+    def delete(self) -> None:
+        """Remove the whole checkpoint directory (after any in-flight async
+        save). For spooled jobs — e.g. the serving tier time-slicing a
+        giant sweep through per-job scratch checkpoints — whose state is
+        worthless once the final result has been delivered."""
+        self.wait()
+        if self.dir and os.path.isdir(self.dir):
+            shutil.rmtree(self.dir, ignore_errors=True)
+
     def _write(self, flat, manifest, step: int) -> None:
         tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
         final = os.path.join(self.dir, f"step_{step:010d}")

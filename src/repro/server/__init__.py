@@ -1,0 +1,46 @@
+"""Async serving tier over the sweep service — the ROADMAP "RPC/HTTP
+wrapper + background flush policy + per-tenant fairness" follow-up.
+
+Four layers, all on the existing scheduler/cache stack (`repro.service`):
+
+  * `repro.server.daemon` — `ServeDaemon` + `FlushPolicy`: a background
+    thread triggers the coalesced flush on size/deadline policy (clients
+    never block on a barrier) and keeps dispatched batch widths at
+    previously-compiled values (`WidthRegistry`) so the warm path stays at
+    0 compiles; giant sweeps time-slice through the checkpointed
+    ``run_job(max_groups=…)`` between flushes.
+  * `repro.server.fairness` — `FairShare` + `TenantPolicy`: deficit-round-
+    robin admission with weighted quotas and priority classes; one
+    tenant's huge grid cannot starve the queue.
+  * `repro.server.http` / `repro.server.client` — stdlib-only HTTP
+    front-end (`SweepServer`) and client (`SweepClient`): submit / result
+    (long-poll) / flush / stats / healthz, results bit-identical to
+    in-process ``run_sweep``.
+  * `repro.server.metrics` — one JSON snapshot: ServiceStats, queue depth,
+    per-tenant rows, p50/p95 flush + request latency, daemon counters.
+"""
+from repro.server.client import ServerError, SweepClient
+from repro.server.daemon import (
+    DaemonStats,
+    FlushPolicy,
+    JobHandle,
+    ServeDaemon,
+    WidthRegistry,
+)
+from repro.server.fairness import FairShare, TenantPolicy
+from repro.server.http import SweepServer
+from repro.server.metrics import snapshot
+
+__all__ = [
+    "FlushPolicy",
+    "ServeDaemon",
+    "WidthRegistry",
+    "JobHandle",
+    "DaemonStats",
+    "FairShare",
+    "TenantPolicy",
+    "SweepServer",
+    "SweepClient",
+    "ServerError",
+    "snapshot",
+]

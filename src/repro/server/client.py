@@ -1,0 +1,126 @@
+"""Python client for the sweep server's HTTP API (stdlib urllib only).
+
+    client = SweepClient("http://127.0.0.1:8742")
+    rid = client.submit(specs, tenant="team-a")     # returns immediately
+    res = client.result(rid, timeout=60)            # long-polls the server
+    # res is a SweepResult, bit-identical to run_sweep(obj, epochs, specs)
+
+``result`` long-polls: each round the SERVER blocks up to its per-request
+wait bound and answers 504/"pending" if the flush daemon hasn't run the
+request yet; the client re-polls until its own ``timeout``. Submitting
+never triggers execution — batching is entirely the server's policy —
+except through :meth:`flush`, the explicit escape hatch.
+
+Error mapping mirrors the service's in-process exceptions: 404 raises
+KeyError, 410 raises `repro.service.ResultEvictedError`, 400 raises
+ValueError, anything else `ServerError`.
+"""
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.request
+from typing import List, Optional, Sequence
+
+from repro.core.sweep import SweepResult, SweepSpec
+from repro.server.http import result_from_dict, spec_to_dict
+from repro.service.api import ResultEvictedError
+
+
+class ServerError(RuntimeError):
+    """A non-2xx response that doesn't map to a standard exception."""
+
+    def __init__(self, status: int, payload: dict):
+        super().__init__(f"HTTP {status}: {payload.get('error', payload)}")
+        self.status = status
+        self.payload = payload
+
+
+class SweepClient:
+    def __init__(self, base_url: str, *, timeout: float = 30.0,
+                 poll_s: float = 10.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout           # per-HTTP-call socket timeout
+        self.poll_s = poll_s             # server-side wait per result poll
+
+    # ------------------------------------------------------------ plumbing
+    def _call(self, method: str, path: str,
+              body: Optional[dict] = None) -> dict:
+        data = None if body is None else json.dumps(body).encode()
+        req = urllib.request.Request(
+            self.base_url + path, data=data, method=method,
+            headers={"Content-Type": "application/json"})
+        try:
+            # socket timeout must outlast the server-side result wait
+            with urllib.request.urlopen(
+                    req, timeout=self.timeout + self.poll_s) as resp:
+                return json.loads(resp.read().decode())
+        except urllib.error.HTTPError as e:
+            try:
+                payload = json.loads(e.read().decode())
+            except (ValueError, OSError):
+                payload = {"error": str(e)}
+            raise self._map_error(e.code, payload) from None
+
+    @staticmethod
+    def _map_error(status: int, payload: dict) -> Exception:
+        message = payload.get("error", f"HTTP {status}")
+        if status == 404 and payload.get("status") == "unknown":
+            return KeyError(message)
+        if status == 410:
+            return ResultEvictedError(message)
+        if status == 504:
+            return TimeoutError(message)
+        if status == 400:
+            return ValueError(message)
+        return ServerError(status, payload)
+
+    # ------------------------------------------------------------- the API
+    def healthz(self) -> dict:
+        return self._call("GET", "/healthz")
+
+    def stats(self) -> dict:
+        return self._call("GET", "/stats")
+
+    def submit(self, specs: Sequence[SweepSpec],
+               epochs: Optional[int] = None, *, tenant: str = "default",
+               priority: int = 0) -> int:
+        body = {"specs": [spec_to_dict(s) for s in specs],
+                "tenant": tenant, "priority": priority}
+        if epochs is not None:
+            body["epochs"] = epochs
+        return int(self._call("POST", "/submit", body)["request_id"])
+
+    def flush(self) -> List[int]:
+        """Force a flush now (the eager path; normally the server's flush
+        daemon decides when to dispatch)."""
+        return [int(i) for i in self._call("POST", "/flush")["completed"]]
+
+    def result(self, request_id: int,
+               timeout: Optional[float] = 60.0) -> SweepResult:
+        """Long-poll until the request's result is served (TimeoutError
+        after ``timeout`` seconds; None polls forever)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            remaining = (self.poll_s if deadline is None
+                         else deadline - time.monotonic())
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"request {request_id} not served within {timeout}s")
+            try:
+                payload = self._call(
+                    "GET", f"/result/{request_id}"
+                    f"?timeout_s={min(self.poll_s, remaining):.3f}")
+            except TimeoutError:
+                continue                 # server said "pending": poll again
+            return result_from_dict(payload)
+
+    def sweep(self, specs: Sequence[SweepSpec],
+              epochs: Optional[int] = None, *, tenant: str = "default",
+              priority: int = 0,
+              timeout: Optional[float] = 60.0) -> SweepResult:
+        """submit + result in one call (still batched by server policy)."""
+        return self.result(
+            self.submit(specs, epochs, tenant=tenant, priority=priority),
+            timeout=timeout)

@@ -1,0 +1,287 @@
+"""Stdlib-only HTTP front-end over `SweepService` + `ServeDaemon`.
+
+One `ThreadingHTTPServer` (a thread per connection — the service and
+daemon below it are already thread-safe) exposing the serving tier:
+
+    POST /submit    {"specs": [...], "epochs"?, "tenant"?, "priority"?}
+                    -> {"request_id": N}           (admits; nothing runs)
+    GET  /result/N?timeout_s=S
+                    -> the request's SweepResult   (blocks until the
+                    daemon's size/deadline policy has flushed it — the
+                    handler WAITS, it never forces a flush, so a result
+                    poll cannot defeat coalescing)
+    POST /flush     -> {"completed": [ids]}        (operator escape hatch)
+    GET  /stats     -> repro.server.metrics.snapshot(...)
+    GET  /healthz   -> {"status": "ok", ...}
+
+Status mapping: bad input 400; unknown id 404; completed-but-evicted id
+410 (`ResultEvictedError` — re-submit or raise ``max_results``); result
+not ready within ``timeout_s`` 504 with ``{"status": "pending"}`` (the
+client long-polls again). Everything is JSON; numeric payloads round-trip
+bit-exactly (Python floats serialize via shortest-round-trip repr, and
+float32→float64→float32 is lossless), so an HTTP client's `SweepResult`
+is bit-identical to an in-process ``run_sweep`` — pinned by
+tests/test_server_http.py, sharded and unsharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional, Tuple
+from urllib.parse import parse_qs, urlparse
+
+import numpy as np
+
+from repro.core.sweep import SweepResult, SweepSpec
+from repro.server import metrics as _metrics
+from repro.server.daemon import ServeDaemon
+from repro.server.fairness import FairShare
+from repro.service.api import ResultEvictedError, SweepService
+
+_SPEC_FIELDS = {f.name: f.type for f in dataclasses.fields(SweepSpec)}
+_RESULT_PATH = re.compile(r"^/result/(\d+)$")
+# bound server-side result waits so a dead daemon can't pin handler
+# threads forever; clients long-poll in increments below this
+MAX_WAIT_S = 30.0
+
+
+# ------------------------------------------------------------- wire codecs
+def spec_to_dict(spec: SweepSpec) -> dict:
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(payload: dict) -> SweepSpec:
+    if not isinstance(payload, dict):
+        raise ValueError(f"spec must be an object, got {type(payload).__name__}")
+    unknown = set(payload) - set(_SPEC_FIELDS)
+    if unknown:
+        raise ValueError(f"unknown SweepSpec fields {sorted(unknown)} "
+                         f"(valid: {sorted(_SPEC_FIELDS)})")
+    return SweepSpec(**payload)
+
+
+def result_to_dict(request_id: int, res: SweepResult) -> dict:
+    """JSON payload for one result. Arrays go as nested lists of Python
+    scalars — exact: float32/float64 survive the repr round-trip."""
+    return {
+        "request_id": request_id,
+        "specs": [spec_to_dict(s) for s in res.specs],
+        "histories": res.histories.tolist(),
+        "effective_passes": res.effective_passes.tolist(),
+        "final_w": res.final_w.tolist(),
+        "total_updates": res.total_updates.tolist(),
+        "epochs_per_row": res.epochs_per_row.tolist(),
+    }
+
+
+def result_from_dict(payload: dict) -> SweepResult:
+    return SweepResult(
+        specs=tuple(spec_from_dict(s) for s in payload["specs"]),
+        histories=np.asarray(payload["histories"], np.float32),
+        effective_passes=np.asarray(payload["effective_passes"], np.float64),
+        final_w=np.asarray(payload["final_w"], np.float32),
+        total_updates=np.asarray(payload["total_updates"], np.int64),
+        epochs_per_row=np.asarray(payload["epochs_per_row"], np.int64))
+
+
+# ---------------------------------------------------------------- handler
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-sweep-server/1.0"
+    protocol_version = "HTTP/1.1"
+
+    def log_message(self, *args):        # quiet: metrics replace the log
+        pass
+
+    # `self.server` is the SweepHTTPServer below
+    @property
+    def svc(self) -> SweepService:
+        return self.server.service
+
+    def _json(self, code: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, message: str, **extra) -> None:
+        self._json(code, {"error": message, **extra})
+
+    def _read_body(self) -> dict:
+        length = int(self.headers.get("Content-Length") or 0)
+        if length == 0:
+            return {}
+        payload = json.loads(self.rfile.read(length).decode())
+        if not isinstance(payload, dict):
+            raise ValueError("request body must be a JSON object")
+        return payload
+
+    # ------------------------------------------------------------- routes
+    def do_GET(self) -> None:          # noqa: N802 (stdlib handler API)
+        url = urlparse(self.path)
+        m = _RESULT_PATH.match(url.path)
+        try:
+            if url.path == "/healthz":
+                self._json(200, {
+                    "status": "ok",
+                    "uptime_s": time.monotonic() - self.server.started_at,
+                    "pending_requests": self.svc.pending(),
+                    "daemon_running": self.server.daemon is not None})
+            elif url.path == "/stats":
+                self._json(200, _metrics.snapshot(
+                    self.svc, self.server.daemon, self.server.fairness))
+            elif m:
+                self._get_result(int(m.group(1)), url.query)
+            else:
+                self._error(404, f"no route {url.path!r}")
+        except BrokenPipeError:          # client went away mid-write
+            pass
+        except Exception as e:           # any other failure must still be
+            self._safe_error(e)          # an HTTP answer, not a dropped
+        #                                  socket the client can't map
+
+    def _safe_error(self, e: Exception) -> None:
+        try:
+            self._error(500, f"{type(e).__name__}: {e}")
+        except OSError:                  # response already partly written
+            pass
+
+    def _get_result(self, rid: int, query: str) -> None:
+        try:
+            timeout = float(parse_qs(query).get("timeout_s", ["10"])[0])
+        except ValueError:
+            return self._error(400, "timeout_s must be a number")
+        timeout = max(0.0, min(timeout, MAX_WAIT_S))
+        try:
+            res = self.svc.wait_result(rid, timeout=timeout)
+        except ResultEvictedError as e:
+            return self._error(410, str(e), status="evicted")
+        except TimeoutError:
+            return self._error(504, f"request {rid} still pending after "
+                               f"{timeout}s (the flush daemon will run it;"
+                               " poll again)", status="pending")
+        except KeyError:
+            return self._error(404, f"unknown request id {rid}",
+                               status="unknown")
+        self._json(200, result_to_dict(rid, res))
+
+    def do_POST(self) -> None:         # noqa: N802 (stdlib handler API)
+        url = urlparse(self.path)
+        try:
+            if url.path == "/submit":
+                self._post_submit()
+            elif url.path == "/flush":
+                if self.server.daemon is not None:
+                    done = self.server.daemon.flush_now()
+                else:
+                    # no daemon: still honour a configured fair-share
+                    # policy rather than draining in arrival order
+                    fair = self.server.fairness
+                    done = self.svc.flush(
+                        fair.select if fair is not None else None)
+                self._json(200, {"completed": done})
+            else:
+                self._error(404, f"no route {url.path!r}")
+        except BrokenPipeError:
+            pass
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            self._error(400, str(e))
+        except Exception as e:           # e.g. a dispatch error from /flush
+            self._safe_error(e)          # (requests re-queued service-side)
+
+    def _post_submit(self) -> None:
+        payload = self._read_body()
+        specs_raw = payload.get("specs")
+        if not isinstance(specs_raw, list) or not specs_raw:
+            raise ValueError('"specs" must be a non-empty list of spec '
+                             "objects")
+        specs = [spec_from_dict(s) for s in specs_raw]
+        epochs = payload.get("epochs")
+        if epochs is not None:
+            epochs = int(epochs)
+        rid = self.svc.submit(
+            specs, epochs, tenant=str(payload.get("tenant", "default")),
+            priority=int(payload.get("priority", 0)))
+        self._json(200, {"request_id": rid})
+
+
+# ----------------------------------------------------------------- server
+class SweepHTTPServer(ThreadingHTTPServer):
+    daemon_threads = True            # handler threads die with the process
+    # a handler thread blocked in wait_result holds no lock that accept()
+    # needs, so threading + blocking waits coexist
+
+    def __init__(self, address: Tuple[str, int], service: SweepService,
+                 daemon: Optional[ServeDaemon],
+                 fairness: Optional[FairShare]):
+        super().__init__(address, _Handler)
+        self.service = service
+        self.daemon = daemon
+        self.fairness = fairness
+        self.started_at = time.monotonic()
+
+
+class SweepServer:
+    """Bundle of service + flush daemon + HTTP listener with one lifecycle.
+
+        server = SweepServer(svc, policy=FlushPolicy(max_delay_ms=25))
+        server.start()                       # daemon thread + HTTP thread
+        ... SweepClient(server.url) ...
+        server.stop()                        # drains the queue first
+
+    ``port=0`` binds an ephemeral port (tests); ``daemon=None`` with
+    ``policy=None`` serves without a background flusher (clients must
+    POST /flush — the eager baseline the latency benchmark compares).
+    """
+
+    def __init__(self, service: SweepService, *,
+                 policy=None, fairness: Optional[FairShare] = None,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.service = service
+        self.fairness = fairness
+        self.daemon = (ServeDaemon(service, policy, fairness=fairness)
+                       if policy is not None else None)
+        self._http = SweepHTTPServer((host, port), service, self.daemon,
+                                     fairness)
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._http.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def start(self) -> "SweepServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        if self.daemon is not None:
+            self.daemon.start()
+        self._thread = threading.Thread(target=self._http.serve_forever,
+                                        daemon=True,
+                                        name="sweep-http-server")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._http.shutdown()        # stop accepting, then drain the daemon
+        self._thread.join(30.0)
+        self._thread = None
+        self._http.server_close()
+        if self.daemon is not None:
+            self.daemon.stop(drain=True)
+
+    def __enter__(self) -> "SweepServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -12,19 +12,22 @@ from a benchmark harness into a multi-tenant sweep server:
   * `repro.service.api` — the `SweepService` front-end (submit / flush /
     result, `ServiceStats`) plus checkpoint-resumable jobs.
 """
-from repro.service.api import ServiceStats, SweepService
+from repro.service.api import ResultEvictedError, ServiceStats, SweepService
 from repro.service.cache import (
     CacheStats,
     cache_size,
     cache_stats,
     clear_cache,
     get_group_runner,
+    scoped_counters,
     set_cache_limit,
 )
 from repro.service.scheduler import (
     CoalescedBatch,
     DispatchInfo,
+    FlushSelector,
     SweepRequest,
+    WidthPolicy,
     coalesce,
     dispatch,
 )
@@ -32,15 +35,19 @@ from repro.service.scheduler import (
 __all__ = [
     "SweepService",
     "ServiceStats",
+    "ResultEvictedError",
     "CacheStats",
     "cache_stats",
     "cache_size",
     "clear_cache",
     "set_cache_limit",
+    "scoped_counters",
     "get_group_runner",
     "SweepRequest",
     "CoalescedBatch",
     "DispatchInfo",
+    "FlushSelector",
+    "WidthPolicy",
     "coalesce",
     "dispatch",
 ]

@@ -29,9 +29,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import zlib
-from collections import OrderedDict
-from typing import List, Optional, Sequence, Tuple
+from collections import OrderedDict, deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -49,15 +50,25 @@ from repro.core.sweep import (
     plan_sweep,
 )
 from repro.service import cache as _cache
-from repro.service.scheduler import SweepRequest, coalesce, dispatch
+from repro.service.scheduler import (FlushSelector, SweepRequest,
+                                     WidthPolicy, coalesce, dispatch)
+
+
+class ResultEvictedError(KeyError):
+    """The request id WAS completed, but its result has been released —
+    evicted past the service's ``max_results`` FIFO retention bound or
+    explicitly ``discard()``ed. Distinct from the bare KeyError an id that
+    never existed raises, so a client of a busy server knows to re-submit
+    (or raise ``max_results``) instead of chasing a phantom id."""
 
 
 @dataclasses.dataclass(frozen=True)
 class ServiceStats:
-    """Service-lifetime accounting. The cache counters cover THIS
-    service's own dispatch windows only (absorbed around each flush /
-    job group), so other tenants sharing the process-global runner cache
-    don't pollute them."""
+    """Service-lifetime accounting. The cache counters are credited at the
+    LOOKUP SITE through a thread-scoped sink (`repro.service.cache
+    .scoped_counters`), so they cover exactly this service's own lookups —
+    another service flushing concurrently in the same process cannot
+    pollute them (regression-tested in tests/test_service.py)."""
     requests_submitted: int
     requests_completed: int
     rows_submitted: int
@@ -68,6 +79,7 @@ class ServiceStats:
     cache_hits: int
     cache_misses: int
     compiles: int
+    rows_padded: int = 0         # stable-width pad rows ever dispatched
 
     @property
     def cache_hit_rate(self) -> float:
@@ -88,12 +100,19 @@ class SweepService:
 
     def __init__(self, obj: LogisticRegression, *, epochs: int = 10,
                  drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
-                 w0=None, max_results: int = 1024):
+                 w0=None, max_results: int = 1024,
+                 width_policy: Optional[WidthPolicy] = None,
+                 latency_window: int = 512, max_tenants: int = 1024):
         self.obj = obj
         self.default_epochs = epochs
         self.drop_prob = drop_prob
         self.mesh = mesh
         self.w0 = w0
+        # flush-policy hooks the serving tier (repro.server) installs: a
+        # width policy keeps dispatched batch widths at previously-compiled
+        # values; submit listeners wake the background flush daemon
+        self.width_policy = width_policy
+        self._submit_listeners: List[Callable[[], None]] = []
         # queue/id/results/stats mutations hold _lock so concurrent tenant
         # threads can't mint duplicate ids or lose a submit that races a
         # flush; the XLA dispatch itself runs OUTSIDE the lock (re-entrant
@@ -112,29 +131,48 @@ class SweepService:
         # evicted ids raise KeyError like unknown ones.
         self._results: "OrderedDict[int, SweepResult]" = OrderedDict()
         self._max_results = max_results
+        # ids a thread is currently blocked on in wait_result()/result():
+        # the retention eviction skips these — a result must never be
+        # thrown away while its consumer is blocked waiting for it
+        self._watched: Dict[int, int] = {}
         self._next_id = 0
-        # service-local cache accounting: global-counter deltas absorbed
-        # around each of THIS service's dispatch windows. Traffic outside
-        # the windows (and clear_cache between flushes) can't pollute the
-        # counters; another service flushing CONCURRENTLY with a window
-        # still can — attribution is per-window, not per-lookup — so treat
-        # the counters as approximate under concurrent multi-service use
-        self._cache_hits = 0
-        self._cache_misses = 0
-        self._compiles = 0
+        # service-local cache accounting, credited PER LOOKUP: dispatch
+        # windows install this sink on their thread via
+        # `cache.scoped_counters`, so only lookups this service actually
+        # performs land here — exact even when several services flush
+        # concurrently (the old absorb-the-global-delta scheme was racy
+        # across services and is gone)
+        self._cache_sink = _cache._Counters()
         self._requests_submitted = 0
         self._requests_completed = 0
         self._rows_submitted = 0
         self._rows_coalesced = 0
         self._groups_dispatched = 0
         self._groups_merged = 0
+        self._rows_padded = 0
         self._flushes = 0
+        # tenant -> [rows submitted, rows completed] (metrics endpoint);
+        # FIFO-bounded like the results store — tenant tags are arbitrary
+        # client-supplied strings, so an adversarial/buggy client minting a
+        # fresh tag per request must not grow the map without bound
+        self._tenant_rows: "OrderedDict[str, List[int]]" = OrderedDict()
+        self._max_tenants = max_tenants
+        # recent flush dispatch durations + request submit->complete
+        # latencies (seconds), bounded so a long-lived server can't grow
+        # them; the metrics layer derives p50/p95 from these
+        self._flush_latencies: deque = deque(maxlen=latency_window)
+        self._request_latencies: deque = deque(maxlen=latency_window)
 
     # ---------------------------------------------------------------- queue
     def submit(self, specs: Sequence[SweepSpec],
-               epochs: Optional[int] = None) -> int:
+               epochs: Optional[int] = None, *, tenant: str = "default",
+               priority: int = 0) -> int:
         """Admit one request (one logical client). Returns its id; nothing
         executes until `flush` (or a `result` call forces one).
+
+        ``tenant``/``priority`` tag the request for admission control —
+        the fair-share flush selector (`repro.server.fairness`) slices
+        flushes by them; they never affect the numeric result.
 
         Specs are VALIDATED here, not at flush: the request is fully
         planned (normalized AND resolved against the objective, the same
@@ -153,23 +191,38 @@ class SweepService:
             rid = self._next_id
             self._next_id += 1
             self._pending.append(SweepRequest(
-                request_id=rid, specs=specs, epochs=default))
+                request_id=rid, specs=specs, epochs=default,
+                tenant=str(tenant), priority=int(priority),
+                submitted_at=time.monotonic()))
             self._requests_submitted += 1
             self._rows_submitted += len(specs)
+            rows = self._tenant_rows.setdefault(str(tenant), [0, 0])
+            rows[0] += len(specs)
+            while len(self._tenant_rows) > self._max_tenants:
+                self._tenant_rows.popitem(last=False)
+            listeners = tuple(self._submit_listeners)
+        for cb in listeners:                     # outside the lock: a
+            cb()                                 # listener may touch us
         return rid
 
-    def _absorb_cache_delta(self, base: "_cache.CacheStats") -> None:
-        """Fold one dispatch window's cache counter movement into the
-        service-local totals (clamped: a concurrent `clear_cache` mid-window
-        must not produce negative counts)."""
-        delta = _cache.cache_stats().since(base)
+    def add_submit_listener(self, cb: Callable[[], None]) -> None:
+        """Register a callback fired after every successful submit (the
+        background flush daemon's wake-up hook)."""
         with self._lock:
-            self._cache_hits += max(0, delta.hits)
-            self._cache_misses += max(0, delta.misses)
-            self._compiles += max(0, delta.compiles)
+            self._submit_listeners.append(cb)
 
-    def flush(self) -> List[int]:
-        """Coalesce + dispatch every pending request; returns their ids.
+    def remove_submit_listener(self, cb: Callable[[], None]) -> None:
+        with self._lock:
+            if cb in self._submit_listeners:
+                self._submit_listeners.remove(cb)
+
+    def flush(self, selector: Optional[FlushSelector] = None) -> List[int]:
+        """Coalesce + dispatch pending requests; returns completed ids.
+
+        ``selector`` (the fair-share admission hook) partitions the queue
+        into the requests this flush takes and the ones it keeps for the
+        next; ``None`` takes everything. Kept requests stay pending in
+        their selector-returned order.
 
         The queue is detached BEFORE dispatch (one atomic swap), so a
         request submitted while the XLA work runs lands in the fresh queue
@@ -177,16 +230,29 @@ class SweepService:
         post-dispatch clear; if dispatch fails the detached requests are
         re-queued rather than lost."""
         with self._lock:
-            pending, self._pending = self._pending, []
+            if selector is None:
+                pending, self._pending = self._pending, []
+            else:
+                before = sorted(r.request_id for r in self._pending)
+                take, keep = selector(tuple(self._pending))
+                pending, keep = list(take), list(keep)
+                after = sorted(r.request_id for r in pending + keep)
+                if after != before:
+                    raise ValueError(
+                        "flush selector must partition the pending queue "
+                        f"(got ids {after}, queue held {before})")
+                self._pending = keep
             self._inflight.update(r.request_id for r in pending)
         if not pending:
             return []
         batch = coalesce(self.obj, tuple(pending))
-        base = _cache.cache_stats()
+        t0 = time.perf_counter()
         try:
-            results, info = dispatch(self.obj, batch, w0=self.w0,
-                                     drop_prob=self.drop_prob,
-                                     mesh=_active_mesh(self.mesh))
+            with _cache.scoped_counters(self._cache_sink):
+                results, info = dispatch(self.obj, batch, w0=self.w0,
+                                         drop_prob=self.drop_prob,
+                                         mesh=_active_mesh(self.mesh),
+                                         width_policy=self.width_policy)
         except Exception:
             with self._lock:
                 self._pending = pending + self._pending
@@ -194,39 +260,110 @@ class SweepService:
                     r.request_id for r in pending)
                 self._done_cv.notify_all()
             raise
+        now = time.monotonic()
         with self._lock:
-            self._absorb_cache_delta(base)
             self._results.update(results)
-            while len(self._results) > self._max_results:
-                self._results.popitem(last=False)    # evict oldest
+            # evict oldest first, but never a result a thread is blocked
+            # waiting on — one wide flush completing more requests than
+            # max_results must not throw away work whose consumer is
+            # already parked on the condition variable
+            evictable = [rid for rid in self._results
+                         if rid not in self._watched]
+            while len(self._results) > self._max_results and evictable:
+                del self._results[evictable.pop(0)]
             self._inflight.difference_update(results)
             self._requests_completed += len(results)
             self._rows_coalesced += info.rows_coalesced
             self._groups_dispatched += info.groups_dispatched
             self._groups_merged += info.groups_merged
+            self._rows_padded += info.rows_padded
             self._flushes += 1
+            self._flush_latencies.append(time.perf_counter() - t0)
+            for req in pending:
+                self._tenant_rows.setdefault(req.tenant, [0, 0])[1] += \
+                    req.rows
+                if req.submitted_at:
+                    self._request_latencies.append(now - req.submitted_at)
             self._done_cv.notify_all()
         return sorted(results)
+
+    def _missing(self, request_id: int) -> KeyError:
+        """The right error for an id that is not pending/inflight/stored.
+        Every minted id enters the queue, so an id below the mint counter
+        MUST have completed and been released — distinguishable from a
+        phantom id with no bookkeeping at all."""
+        if 0 <= request_id < self._next_id:
+            return ResultEvictedError(
+                f"result for request {request_id} was evicted: completed "
+                f"results are FIFO-bounded (max_results={self._max_results})"
+                " or were explicitly discarded; re-submit the specs or "
+                "raise max_results")
+        return KeyError(f"unknown request id {request_id}")
+
+    def _watch(self, request_id: int) -> None:
+        """Mark an id as actively awaited (refcounted): the retention
+        eviction will not drop it while any waiter is parked on it."""
+        with self._lock:
+            self._watched[request_id] = self._watched.get(request_id, 0) + 1
+
+    def _unwatch(self, request_id: int) -> None:
+        with self._lock:
+            count = self._watched.get(request_id, 0) - 1
+            if count <= 0:
+                self._watched.pop(request_id, None)
+            else:
+                self._watched[request_id] = count
 
     def result(self, request_id: int) -> SweepResult:
         """This request's `SweepResult` (bit-identical to a standalone
         `run_sweep` of its specs). Flushes first if it is still queued,
         and WAITS if another thread's flush has the request in flight.
-        Raises KeyError for unknown ids — including results already
-        evicted past the ``max_results`` retention bound."""
-        while True:
-            with self._done_cv:                # shares the service lock
-                if request_id in self._results:
-                    return self._results[request_id]
-                if request_id in self._inflight:
-                    self._done_cv.wait()
-                    continue
-                queued = any(r.request_id == request_id
-                             for r in self._pending)
-            if queued:
+        Raises `ResultEvictedError` for completed-then-released ids and
+        bare KeyError for ids that never existed."""
+        self._watch(request_id)
+        try:
+            while True:
+                with self._done_cv:            # shares the service lock
+                    if request_id in self._results:
+                        return self._results[request_id]
+                    if request_id in self._inflight:
+                        self._done_cv.wait()
+                        continue
+                    queued = any(r.request_id == request_id
+                                 for r in self._pending)
+                    if not queued:
+                        raise self._missing(request_id)
                 self.flush()
-                continue
-            raise KeyError(f"unknown request id {request_id}")
+        finally:
+            self._unwatch(request_id)
+
+    def wait_result(self, request_id: int,
+                    timeout: Optional[float] = None) -> SweepResult:
+        """Like :meth:`result` but NEVER triggers a flush itself — it
+        waits for someone else's (the background flush daemon's deadline
+        policy, another tenant's size-triggered flush). The serving tier's
+        result path uses this so a result poll can't defeat coalescing.
+        Raises TimeoutError if the deadline passes first."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        self._watch(request_id)
+        try:
+            with self._done_cv:
+                while True:
+                    if request_id in self._results:
+                        return self._results[request_id]
+                    if (request_id not in self._inflight
+                            and not any(r.request_id == request_id
+                                        for r in self._pending)):
+                        raise self._missing(request_id)
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(
+                            f"request {request_id} not completed within "
+                            f"{timeout}s (still queued or in flight)")
+                    self._done_cv.wait(remaining)
+        finally:
+            self._unwatch(request_id)
 
     def discard(self, request_id: int) -> None:
         """Release a completed result early (no-op if absent) — the
@@ -244,9 +381,45 @@ class SweepService:
         with self._lock:
             return len(self._pending)
 
+    def pending_rows(self) -> int:
+        """Total spec rows waiting in the queue (the flush-size trigger)."""
+        with self._lock:
+            return sum(r.rows for r in self._pending)
+
+    def oldest_pending_age(self) -> Optional[float]:
+        """Seconds since the OLDEST queued request was admitted (the
+        flush-deadline trigger), or None when the queue is empty."""
+        with self._lock:
+            stamps = [r.submitted_at for r in self._pending
+                      if r.submitted_at]
+            if not stamps:
+                return None
+            return time.monotonic() - min(stamps)
+
+    def tenant_rows(self) -> Dict[str, Tuple[int, int]]:
+        """Per-tenant (rows submitted, rows completed) snapshot."""
+        with self._lock:
+            return {t: (v[0], v[1]) for t, v in self._tenant_rows.items()}
+
+    def latencies(self) -> Tuple[Tuple[float, ...], Tuple[float, ...]]:
+        """(recent flush dispatch durations, recent request submit->result
+        latencies), both in seconds and bounded by ``latency_window`` —
+        the raw series `repro.server.metrics` derives p50/p95 from."""
+        with self._lock:
+            return tuple(self._flush_latencies), \
+                tuple(self._request_latencies)
+
     # ---------------------------------------------------------------- stats
     def stats(self) -> ServiceStats:
+        """A LOCKED snapshot: the service-level fields are read under the
+        service lock in one critical section, so a completed flush is
+        counted all-or-nothing across them. The cache counters are the one
+        exception — they advance at lookup/trace time MID-dispatch (under
+        the cache lock), so a snapshot taken during a flush can show its
+        lookups before its ``flushes`` increment; successive snapshots are
+        monotonic either way."""
         with self._lock:
+            cache = self._cache_sink.snapshot()
             return ServiceStats(
                 requests_submitted=self._requests_submitted,
                 requests_completed=self._requests_completed,
@@ -255,9 +428,10 @@ class SweepService:
                 groups_dispatched=self._groups_dispatched,
                 groups_merged=self._groups_merged,
                 flushes=self._flushes,
-                cache_hits=self._cache_hits,
-                cache_misses=self._cache_misses,
-                compiles=self._compiles)
+                cache_hits=cache.hits,
+                cache_misses=cache.misses,
+                compiles=cache.compiles,
+                rows_padded=self._rows_padded)
 
     # ------------------------------------------------------ checkpointed job
     def _dataset_crc(self) -> int:
@@ -337,28 +511,27 @@ class SweepService:
                   else jnp.asarray(self.w0))
         mesh = _active_mesh(self.mesh)
         dispatched = 0
-        base = _cache.cache_stats()
-        for gi, (key_, members) in enumerate(group_items):
-            if state["done"][gi]:
-                continue
-            if max_groups is not None and dispatched >= max_groups:
-                self._absorb_cache_delta(base)
-                return None, False
-            group_epochs = plan.group_epochs(key_)
-            hist, w_fin = _dispatch_group(self.obj, plan.specs, resolved,
-                                          members, key_, group_epochs,
-                                          w_init, self.drop_prob, mesh)
-            for row, c in enumerate(members):
-                _write_row_history(state["histories"][c], hist[row],
-                                   group_epochs)
-                state["final_w"][c] = w_fin[row]
-            state["done"][gi] = 1
-            dispatched += 1
-            with self._lock:
-                self._groups_dispatched += 1
-            checkpointer.save(state, step=int(state["done"].sum()),
-                              extra={"job_fingerprint": int(fp),
-                                     "groups_total": len(group_items)})
-        self._absorb_cache_delta(base)
+        with _cache.scoped_counters(self._cache_sink):
+            for gi, (key_, members) in enumerate(group_items):
+                if state["done"][gi]:
+                    continue
+                if max_groups is not None and dispatched >= max_groups:
+                    return None, False
+                group_epochs = plan.group_epochs(key_)
+                hist, w_fin = _dispatch_group(self.obj, plan.specs,
+                                              resolved, members, key_,
+                                              group_epochs, w_init,
+                                              self.drop_prob, mesh)
+                for row, c in enumerate(members):
+                    _write_row_history(state["histories"][c], hist[row],
+                                       group_epochs)
+                    state["final_w"][c] = w_fin[row]
+                state["done"][gi] = 1
+                dispatched += 1
+                with self._lock:
+                    self._groups_dispatched += 1
+                checkpointer.save(state, step=int(state["done"].sum()),
+                                  extra={"job_fingerprint": int(fp),
+                                         "groups_total": len(group_items)})
         return _assemble_result(plan.specs, resolved, state["histories"],
                                 state["final_w"]), True

@@ -31,6 +31,7 @@ executables.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from collections import OrderedDict
@@ -69,6 +70,42 @@ class _Counters:
         self.misses = 0
         self.compiles = 0
 
+    def snapshot(self) -> CacheStats:
+        return CacheStats(hits=self.hits, misses=self.misses,
+                          compiles=self.compiles)
+
+
+# Per-lookup scoped attribution: a caller (one `SweepService` dispatch
+# window) installs a private _Counters sink on ITS thread; every lookup —
+# and every trace-time compile, which happens while the runner is called
+# on the same thread — credits the sink in addition to the globals. Unlike
+# the old absorb-the-global-delta-around-a-window scheme, two services
+# flushing CONCURRENTLY cannot pollute each other's counters: each thread
+# only feeds its own sink.
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def scoped_counters(sink: _Counters):
+    """Credit this thread's cache lookups/compiles to ``sink`` (nests:
+    the previous sink is restored on exit; only the innermost one counts)."""
+    prev = getattr(_TLS, "sink", None)
+    _TLS.sink = sink
+    try:
+        yield sink
+    finally:
+        _TLS.sink = prev
+
+
+def _credit(field: str) -> None:
+    """Bump one counter on the globals and the thread's scoped sink (if
+    any). Caller holds _LOCK; the sink is thread-private so the same lock
+    suffices."""
+    setattr(_COUNTERS, field, getattr(_COUNTERS, field) + 1)
+    sink = getattr(_TLS, "sink", None)
+    if sink is not None:
+        setattr(sink, field, getattr(sink, field) + 1)
+
 
 _LOCK = threading.Lock()
 _RUNNERS: "OrderedDict[tuple, object]" = OrderedDict()
@@ -102,7 +139,7 @@ def _counted(fn):
     _LOCK here cannot deadlock with `get_group_runner`."""
     def traced(*args):
         with _LOCK:
-            _COUNTERS.compiles += 1
+            _credit("compiles")
         return fn(*args)
     return traced
 
@@ -124,10 +161,10 @@ def get_group_runner(engine: str, *, group_epochs: int, total: int,
     with _LOCK:
         runner = _RUNNERS.get(key)
         if runner is not None:
-            _COUNTERS.hits += 1
+            _credit("hits")
             _RUNNERS.move_to_end(key)            # LRU touch
             return runner
-        _COUNTERS.misses += 1
+        _credit("misses")
         fn, num_row = _sweep._group_fn(engine, epochs=group_epochs,
                                        total=total, buf_len=buf_len,
                                        option=option, drop_prob=drop_prob)

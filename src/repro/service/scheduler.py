@@ -34,7 +34,8 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 import jax.numpy as jnp
 import numpy as np
@@ -55,10 +56,41 @@ from repro.core.sweep import (
 @dataclasses.dataclass(frozen=True)
 class SweepRequest:
     """One logical client's sweep: its spec rows + its default epoch budget
-    (per-row ``SweepSpec.epochs`` overrides ride along unchanged)."""
+    (per-row ``SweepSpec.epochs`` overrides ride along unchanged).
+
+    ``tenant``/``priority`` tag the request for admission control — the
+    fair-share selector (`repro.server.fairness`) slices flushes by them;
+    the numeric path below ignores both. ``submitted_at`` is the
+    `time.monotonic()` admission stamp the background flush daemon's
+    deadline policy and the latency metrics read."""
     request_id: int
     specs: Tuple[SweepSpec, ...]
     epochs: int
+    tenant: str = "default"
+    priority: int = 0
+    submitted_at: float = 0.0
+
+    @property
+    def rows(self) -> int:
+        return len(self.specs)
+
+
+# A flush selector partitions the pending queue into (take, keep): `take`
+# coalesces into this flush, `keep` stays queued for the next one. The
+# fair-share scheduler is one; `None` means take everything.
+FlushSelector = Callable[[Tuple[SweepRequest, ...]],
+                         Tuple[Sequence[SweepRequest],
+                               Sequence[SweepRequest]]]
+
+# A width policy maps (group key, merged epoch bound, natural row count) to
+# the row count actually dispatched (>= natural). Returning a previously
+# compiled width lets a warm service stay at 0 compiles even when the
+# pooled batch width drifts — the vmap row count is part of the traced
+# shape, so a NEW width retraces even on a runner-cache hit. Padding rows
+# repeat an existing member; per-row bits are batch-composition-independent
+# (the same contract the sharding padding relies on), so results are
+# unchanged and the pad rows are sliced off before demux.
+WidthPolicy = Callable[[tuple, int, int], int]
 
 
 class _RequestPlan(NamedTuple):
@@ -90,6 +122,8 @@ class DispatchInfo(NamedTuple):
     rows_dispatched: int
     rows_coalesced: int      # rows that shared a group with another request
     groups_merged: int       # groups holding rows from >1 request
+    rows_padded: int = 0     # stable-width pad rows (wasted compute bought
+    #                          against a retrace — see WidthPolicy)
 
 
 def coalesce(obj: LogisticRegression,
@@ -117,12 +151,15 @@ def coalesce(obj: LogisticRegression,
 
 def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
              drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
+             width_policy: Optional[WidthPolicy] = None,
              ) -> Tuple[Dict[int, SweepResult], DispatchInfo]:
     """Run every merged group once, demux per-request `SweepResult`s.
 
     Returns ``({request_id: result}, DispatchInfo)``; each result is
     bit-identical to a standalone `run_sweep` of that request's specs with
-    the same ``w0``/``drop_prob``/``mesh``.
+    the same ``w0``/``drop_prob``/``mesh`` — with or without a
+    ``width_policy`` (pad rows repeat member 0 and are dropped before
+    demux, so they can only cost compute, never change bits).
     """
     specs, resolved = batch.specs, batch.resolved
     w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
@@ -140,10 +177,22 @@ def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
 
     rows_coalesced = 0
     groups_merged = 0
+    rows_padded = 0
     for key_, members in batch.groups.items():
         group_epochs = batch.group_epochs(key_)
-        hist, w_fin = _dispatch_group(obj, specs, resolved, members, key_,
-                                      group_epochs, w_init, drop_prob, mesh)
+        run_members = members
+        if width_policy is not None:
+            width = int(width_policy(key_, group_epochs, len(members)))
+            if width < len(members):
+                raise ValueError(
+                    f"width policy shrank group {key_}: {width} < "
+                    f"{len(members)} real rows")
+            run_members = members + [members[0]] * (width - len(members))
+            rows_padded += width - len(members)
+        hist, w_fin = _dispatch_group(obj, specs, resolved, run_members,
+                                      key_, group_epochs, w_init, drop_prob,
+                                      mesh)
+        hist, w_fin = hist[:len(members)], w_fin[:len(members)]
         owners = {bisect.bisect_right(offsets, c) - 1 for c in members}
         if len(owners) > 1:
             groups_merged += 1
@@ -165,5 +214,6 @@ def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
     info = DispatchInfo(groups_dispatched=len(batch.groups),
                         rows_dispatched=len(specs),
                         rows_coalesced=rows_coalesced,
-                        groups_merged=groups_merged)
+                        groups_merged=groups_merged,
+                        rows_padded=rows_padded)
     return results, info

@@ -1,0 +1,145 @@
+"""Fair-share admission suite: deficit-round-robin accounting.
+
+Pure-Python (no XLA): `FairShare.select` partitions queues of tenant-
+tagged `SweepRequest`s; these tests pin the DRR accounting — weighted
+quotas, priority classes, per-tenant FIFO order, giant-request behaviour
+(bounded waiting in BOTH directions: smalls can't be starved by a giant,
+the giant can't be starved by smalls), and the partition property the
+service's flush contract relies on.
+"""
+from collections import Counter
+
+import pytest
+
+from repro.core import SweepSpec
+from repro.server.fairness import FairShare, TenantPolicy
+from repro.service.scheduler import SweepRequest
+
+
+def _req(rid: int, tenant: str, rows: int = 1, priority: int = 0):
+    return SweepRequest(request_id=rid,
+                        specs=tuple(SweepSpec(seed=100 * rid + i)
+                                    for i in range(rows)),
+                        epochs=1, tenant=tenant, priority=priority)
+
+
+def _queue(counts, rows=1, priority=None):
+    """Interleaved queues: counts = {tenant: n_requests}."""
+    out, rid = [], 0
+    for i in range(max(counts.values())):
+        for tenant, n in counts.items():
+            if i < n:
+                out.append(_req(rid, tenant, rows,
+                                0 if priority is None
+                                else priority.get(tenant, 0)))
+                rid += 1
+    return out
+
+
+def test_weighted_quotas_drr_accounting():
+    """Acceptance: per-flush admitted rows split by tenant weight — the
+    deficit-round-robin accounting test. Weight 2 earns twice the rows of
+    weight 1 in every slice, and the deficit bookkeeping conserves rows:
+    earned = spent + banked."""
+    fair = FairShare(quantum_rows=1, max_rows_per_flush=9)
+    fair.set_tenant("A", weight=2.0)
+    fair.set_tenant("B", weight=1.0)
+    pending = _queue({"A": 12, "B": 12})
+    shares = []
+    while pending:
+        take, pending = fair.select(pending)
+        assert take, "fair-share made no progress"
+        got = Counter(r.tenant for r in take)
+        shares.append((got["A"], got["B"]))
+    # full slices split 6:3 by the 2:1 weights; the tail drains B's backlog
+    assert shares[0] == (6, 3) and shares[1] == (6, 3)
+    assert sum(a for a, _ in shares) == 12
+    assert sum(b for _, b in shares) == 12
+    # each tenant's own requests were served strictly FIFO
+    fair2 = FairShare(quantum_rows=1, max_rows_per_flush=9)
+    fair2.set_tenant("A", weight=2.0)
+    pending, seen = _queue({"A": 12, "B": 12}), {"A": [], "B": []}
+    while pending:
+        take, pending = fair2.select(pending)
+        for r in take:
+            seen[r.tenant].append(r.request_id)
+    assert seen["A"] == sorted(seen["A"])
+    assert seen["B"] == sorted(seen["B"])
+
+
+def test_priority_classes_drain_strictly_first():
+    """A higher priority class is admitted before ANY lower-class rows,
+    whatever the weights; classes come from the request tag or the tenant
+    default."""
+    fair = FairShare(quantum_rows=4, max_rows_per_flush=4)
+    fair.set_tenant("bulk", weight=10.0)            # weight can't jump class
+    fair.set_tenant("interactive", priority=5)      # tenant-default class
+    pending = (_queue({"bulk": 4}) +
+               [_req(50, "interactive"), _req(51, "interactive")] +
+               [_req(60, "bulk", priority=9)])      # request tag wins
+    take, keep = fair.select(pending)
+    assert [r.request_id for r in take] == [60, 50, 51, 0]
+    assert all(r.tenant == "bulk" for r in keep)
+
+
+def test_giant_request_cannot_starve_small_tenants():
+    """One tenant's giant grid waits (banking credit) while single-row
+    tenants keep flowing; the giant then gets a dedicated oversized flush
+    — no starvation in either direction."""
+    fair = FairShare(quantum_rows=2, max_rows_per_flush=4)
+    giant = _req(100, "G", rows=10)
+    pending = [giant] + [_req(200 + i, "S") for i in range(6)]
+    rounds = []
+    while pending:
+        take, pending = fair.select(pending)
+        assert take, "no progress"
+        rounds.append([r.request_id for r in take])
+    # smalls drain first, then the giant rides alone (oversized escape)
+    assert [100] in rounds
+    giant_round = rounds.index([100])
+    assert giant_round == len(rounds) - 1
+    assert sorted(sum(rounds[:giant_round], [])) == [200 + i
+                                                     for i in range(6)]
+
+
+def test_select_partitions_the_queue():
+    fair = FairShare(quantum_rows=1, max_rows_per_flush=3)
+    pending = _queue({"A": 5, "B": 5})
+    take, keep = fair.select(pending)
+    assert sorted(r.request_id for r in take + keep) == \
+        sorted(r.request_id for r in pending)
+    assert len(take) == 3
+    # unbounded budget takes everything (still fair-ordered)
+    take_all, keep_all = FairShare(quantum_rows=1).select(pending)
+    assert keep_all == [] and len(take_all) == 10
+
+
+def test_deficit_resets_when_tenant_queue_drains():
+    """Standard DRR: an emptied queue forfeits leftover credit (the entry
+    is pruned entirely — tenant tags are arbitrary client strings, so the
+    accounting map must stay bounded by tenants actively banking credit),
+    and an idle tenant can't hoard a burst allowance."""
+    fair = FairShare(quantum_rows=8, max_rows_per_flush=None)
+    take, keep = fair.select([_req(0, "A")])
+    assert [r.request_id for r in take] == [0] and keep == []
+    assert "A" not in fair.deficits()
+    # a BLOCKED tenant's banked credit does persist across selects
+    fair2 = FairShare(quantum_rows=1, max_rows_per_flush=2)
+    giant = _req(1, "G", rows=8)
+    take, keep = fair2.select([giant, _req(2, "S"), _req(3, "S")])
+    assert [r.request_id for r in take] == [2, 3]
+    assert fair2.deficits().get("G", 0.0) > 0.0
+
+
+def test_policy_validation_and_registry():
+    with pytest.raises(ValueError):
+        TenantPolicy(weight=0.0)
+    with pytest.raises(ValueError):
+        FairShare(quantum_rows=0)
+    with pytest.raises(ValueError):
+        FairShare(max_rows_per_flush=0)
+    fair = FairShare()
+    fair.set_tenant("A", weight=3.0)
+    fair.set_tenant("A", priority=2)              # updates keep other fields
+    assert fair.policy("A") == TenantPolicy(weight=3.0, priority=2)
+    assert fair.policy("unregistered") == TenantPolicy()

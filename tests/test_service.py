@@ -21,6 +21,7 @@ from repro.checkpoint import Checkpointer
 from repro.core import LogisticRegression, SweepSpec, run_sweep
 from repro.data.libsvm import make_synthetic_libsvm
 from repro.service import (
+    ResultEvictedError,
     SweepService,
     cache_size,
     cache_stats,
@@ -194,6 +195,121 @@ def test_results_retention_bound_and_discard(obj):
     with pytest.raises(KeyError):
         svc.result(rids[2])
     svc.discard(rids[2])                       # idempotent
+
+
+def test_eviction_never_drops_actively_awaited_result(obj):
+    """One wide flush completing more requests than ``max_results`` must
+    not evict a result whose consumer is already parked in wait_result —
+    eviction skips watched ids and drops an unwatched one instead."""
+    import threading
+    import time
+
+    svc = SweepService(obj, epochs=1, max_results=1)
+    r1 = svc.submit(_grid_a()[:1])
+    r2 = svc.submit(_grid_a()[1:2])
+    got = {}
+    waiter = threading.Thread(
+        target=lambda: got.update(res=svc.wait_result(r1, timeout=120)))
+    waiter.start()
+    for _ in range(500):                       # let the waiter park
+        if r1 in svc._watched:
+            break
+        time.sleep(0.01)
+    assert r1 in svc._watched
+    svc.flush()                                # completes BOTH requests
+    waiter.join()
+    _assert_same(got["res"], run_sweep(obj, 1, _grid_a()[:1]))
+    with pytest.raises(ResultEvictedError):    # the unwatched one paid
+        svc.result(r2)
+
+
+def test_tenant_accounting_is_bounded(obj):
+    """Tenant tags are arbitrary client strings: the per-tenant row map is
+    FIFO-bounded so tag-churning clients can't grow the service."""
+    svc = SweepService(obj, epochs=1, max_tenants=2)
+    for t in ("a", "b", "c"):
+        svc.submit(_grid_a()[:1], tenant=t)
+    rows = svc.tenant_rows()
+    assert len(rows) == 2 and "a" not in rows
+
+
+def test_evicted_ids_distinguished_from_unknown(obj):
+    """An id whose result fell off the `max_results` FIFO raises the typed
+    `ResultEvictedError` (naming the bound, so a client of a busy server
+    knows to re-submit or raise the bound); an id that NEVER existed stays
+    a bare KeyError. `wait_result` mirrors the distinction."""
+    svc = SweepService(obj, epochs=1, max_results=1)
+    old = svc.submit(_grid_a()[:1])
+    svc.flush()
+    newer = svc.submit(_grid_a()[:1])
+    svc.flush()                                # evicts `old`
+    with pytest.raises(ResultEvictedError, match="max_results=1"):
+        svc.result(old)
+    with pytest.raises(ResultEvictedError):
+        svc.wait_result(old, timeout=0.1)
+    # a phantom id is NOT reported as evicted
+    with pytest.raises(KeyError) as ei:
+        svc.result(10_000)
+    assert not isinstance(ei.value, ResultEvictedError)
+    with pytest.raises(KeyError) as ei:
+        svc.wait_result(10_000, timeout=0.1)
+    assert not isinstance(ei.value, ResultEvictedError)
+    svc.result(newer)                          # the live one still serves
+
+
+def test_flush_selector_must_partition_queue(obj):
+    """A selector that drops or duplicates a request is a lost-request bug
+    waiting to happen; flush() rejects it and keeps the queue intact."""
+    svc = SweepService(obj, epochs=1)
+    rid = svc.submit(_grid_a()[:1])
+    with pytest.raises(ValueError, match="partition"):
+        svc.flush(lambda pending: ((), ()))            # dropped
+    with pytest.raises(ValueError, match="partition"):
+        svc.flush(lambda pending: (pending, pending))  # duplicated
+    assert svc.pending() == 1                  # queue untouched
+    _assert_same(svc.result(rid), run_sweep(obj, 1, _grid_a()[:1]))
+
+
+def test_concurrent_services_cache_attribution_exact(obj):
+    """Cache counters are credited at the LOOKUP site through a thread-
+    scoped sink: a WARM service flushing concurrently with a COLD one
+    (new compiled shape) must report 0 compiles of its own, even though
+    the process-global counters moved under it. The old window-absorption
+    accounting raced exactly here."""
+    import threading
+
+    clear_cache()
+    warm_specs = _grid_a()
+    run_sweep(obj, 2, warm_specs)              # pre-compile the warm shape
+    svc_warm = SweepService(obj, epochs=2)
+    svc_cold = SweepService(obj, epochs=5)     # new epochs-bound: compiles
+    svc_warm.submit(warm_specs)
+    svc_cold.submit(warm_specs)
+    barrier = threading.Barrier(2)
+    errs = []
+
+    def flush(svc):
+        try:
+            barrier.wait()                     # force the windows to overlap
+            svc.flush()
+        except Exception as e:                 # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=flush, args=(s,))
+               for s in (svc_warm, svc_cold)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    warm, cold = svc_warm.stats(), svc_cold.stats()
+    assert warm.compiles == 0, \
+        "warm service charged for a concurrent service's compile"
+    assert cold.compiles >= 1
+    assert warm.cache_hits >= 1 and warm.cache_misses == 0
+    # the per-service sinks jointly account for the global movement
+    total = cache_stats()
+    assert warm.compiles + cold.compiles <= total.compiles
 
 
 def test_concurrent_submits_mint_unique_ids(obj):

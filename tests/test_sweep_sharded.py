@@ -178,6 +178,33 @@ def test_service_coalescing_sharded_bit_identical(obj, mesh):
     assert cache_stats().since(base).compiles == 0
 
 
+def test_http_server_sharded_bit_identical(obj, mesh):
+    """Acceptance (serving tier): results served over HTTP from a SHARDED
+    service — background deadline flush, wire round-trip and all — are
+    bit-identical to in-process `run_sweep`, sharded and unsharded, for
+    every tenant under the forced 8-device mesh."""
+    from repro.server import FlushPolicy, SweepClient, SweepServer
+    from repro.service import SweepService
+
+    tenants = {
+        "team-a": [SweepSpec(scheme=SCHEMES[c % 3], step_size=0.5, tau=3,
+                             num_threads=4, inner_steps=25, seed=40 + c)
+                   for c in range(3)],
+        "team-b": [SweepSpec(algo="hogwild", scheme="consistent",
+                             step_size=0.5, tau=2, num_threads=3, seed=41)],
+    }
+    svc = SweepService(obj, epochs=2, mesh=mesh)
+    with SweepServer(svc, policy=FlushPolicy(max_rows=64,
+                                             max_delay_ms=25)) as server:
+        client = SweepClient(server.url, poll_s=5.0)
+        rids = {name: client.submit(specs, tenant=name)
+                for name, specs in tenants.items()}
+        for name, specs in tenants.items():
+            got = client.result(rids[name], timeout=240)
+            _assert_same(got, run_sweep(obj, 2, specs, mesh=mesh))
+            _assert_same(got, run_sweep(obj, 2, specs))
+
+
 def test_model_axis_mesh_degrades_to_unsharded(obj):
     """A mesh without a >1 `data` axis (e.g. the 1×1 host mesh) falls back
     to the single-device path rather than erroring."""
