@@ -1,4 +1,16 @@
-from repro.core.objective import LogisticRegression
+from repro.core.objective import (
+    LogisticRegression,
+    Objective,
+    get_objective,
+    params_from_flat,
+    register_objective,
+    registered_objectives,
+)
+from repro.core.objectives import (
+    MLPObjective,
+    NonconvexLogistic,
+    mlp_lm_objective,
+)
 from repro.core.svrg import svrg_epoch, run_svrg, sweep_spec as svrg_sweep_spec
 from repro.core.asysvrg import (
     AsyRunResult,
@@ -26,6 +38,14 @@ from repro.core.compression import (
 
 __all__ = [
     "LogisticRegression",
+    "Objective",
+    "register_objective",
+    "get_objective",
+    "registered_objectives",
+    "params_from_flat",
+    "MLPObjective",
+    "NonconvexLogistic",
+    "mlp_lm_objective",
     "svrg_epoch",
     "run_svrg",
     "svrg_sweep_spec",

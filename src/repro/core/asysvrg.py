@@ -54,12 +54,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import SVRGConfig
-from repro.core.objective import (
-    LogisticRegression,
-    full_grad_stable,
-    loss_fixed_order,
-    sample_grad_stable,
-)
+from repro.core.objective import LogisticRegression, Objective
 from repro.kernels.svrg_update import ops as svrg_update_ops
 
 SCHEME_IDS = {"consistent": 0, "inconsistent": 1, "unlock": 2}
@@ -156,17 +151,27 @@ def read_dispatch(scheme_id, buffer, tau, a, m, key, dim: int):
     return jax.lax.switch(scheme_id, branches, (buffer, a, m, key))
 
 
-def _epoch_core(X, y, l2: float, w, key, eta, tau, scheme_id, delay_id, *,
-                total: int, buf_len: int, option: int, drop_prob: float):
+def _epoch_core(obj: Objective, data, w, key, eta, tau, scheme_id, delay_id,
+                *, total: int, buf_len: int, option: int, drop_prob: float):
     """One outer iteration of Algorithm 1, vmap-able over configurations.
+
+    ``obj`` is any `repro.core.objective.Objective`; only its PURE methods
+    (and static config) are used — ``data`` (the `obj.data_args()` tuple)
+    carries every numeric input, so this function can close over ``obj``
+    inside a cached runner and still serve other same-static-key instances'
+    data. ``w`` is the objective's FLAT param vector (pytree objectives
+    cross through `repro.utils.tree`'s bit-exact ravel): the delay ring
+    buffer, the reader coordinate masks and the fused-kernel update below
+    all work on that one vector, unchanged from the logreg-only engine.
 
     Dynamic (batchable): w, key, eta, tau, scheme_id, delay_id.
     Static (shared by the batch): total = M̃ = pM, buf_len ≥ max τ + 1,
     option, drop_prob.
     """
-    n, dim = X.shape
+    n = obj.num_samples(data)
+    dim = w.shape[0]
     k_idx, k_delay, k_scan = jax.random.split(key, 3)
-    mu = full_grad_stable(X, y, l2, w)                  # parallel snapshot pass
+    mu = obj.flat_full_grad(data, w)                    # parallel snapshot pass
     u0 = w
     idx = jax.random.randint(k_idx, (total,), 0, n)
     delays = _delay_schedule_core(delay_id, total, tau, k_delay)
@@ -179,8 +184,8 @@ def _epoch_core(X, y, l2: float, w, key, eta, tau, scheme_id, delay_id, *,
         k_read, k_drop = jax.random.split(k)
         a = jnp.maximum(m - d, 0)
         u_read = read_dispatch(scheme_id, buffer, tau, a, m, k_read, dim)
-        g = sample_grad_stable(X, y, l2, u_read, i)
-        g0 = sample_grad_stable(X, y, l2, u0, i)
+        g = obj.flat_sample_grad(data, i, u_read)
+        g0 = obj.flat_sample_grad(data, i, u0)
         gf = mu
         if drop_prob > 0:
             # unlock write-write race: drop a random coordinate fraction.
@@ -203,7 +208,7 @@ def _epoch_core(X, y, l2: float, w, key, eta, tau, scheme_id, delay_id, *,
     return u_last if option == 1 else acc / total
 
 
-def _resolve_steps(obj: LogisticRegression, cfg: SVRGConfig):
+def _resolve_steps(obj: Objective, cfg: SVRGConfig):
     """(p, M, M̃=pM, clamped τ) from the config — paper §5.1 defaults."""
     p_threads = max(1, cfg.num_threads)
     M = cfg.inner_steps or (2 * obj.n) // p_threads
@@ -213,11 +218,13 @@ def _resolve_steps(obj: LogisticRegression, cfg: SVRGConfig):
     return p_threads, M, total, tau
 
 
-def asysvrg_epoch(obj: LogisticRegression, w, key, cfg: SVRGConfig,
+def asysvrg_epoch(obj: Objective, w, key, cfg: SVRGConfig,
                   delay_kind: str = "fixed", drop_prob: float = 0.02):
     """One outer iteration of Algorithm 1 under the chosen reading scheme.
 
-    Returns w_{t+1} per cfg.option (1 = final iterate, 2 = inner average).
+    ``w`` may be the objective's param pytree or its flat vector; the
+    return matches the flat form. Returns w_{t+1} per cfg.option (1 = final
+    iterate, 2 = inner average).
     """
     if cfg.scheme not in SCHEME_IDS:
         raise ValueError(f"unknown scheme {cfg.scheme!r}")
@@ -226,13 +233,13 @@ def asysvrg_epoch(obj: LogisticRegression, w, key, cfg: SVRGConfig,
     _, _, total, tau = _resolve_steps(obj, cfg)
     delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
     return _epoch_core(
-        obj.X, obj.y, obj.l2, w, key,
+        obj, obj.data_args(), obj.as_flat(w), key,
         jnp.float32(cfg.step_size), jnp.int32(tau),
         jnp.int32(SCHEME_IDS[cfg.scheme]), jnp.int32(delay_id),
         total=total, buf_len=tau + 1, option=cfg.option, drop_prob=drop_prob)
 
 
-def run_asysvrg(obj: LogisticRegression, epochs: int, cfg: SVRGConfig,
+def run_asysvrg(obj: Objective, epochs: int, cfg: SVRGConfig,
                 seed: int = 0, w0=None, delay_kind: str = "fixed",
                 drop_prob: float = 0.02) -> AsyRunResult:
     """Multi-epoch driver (one configuration, one jit per call).
@@ -240,9 +247,11 @@ def run_asysvrg(obj: LogisticRegression, epochs: int, cfg: SVRGConfig,
     Effective-pass accounting follows §5.1: each epoch visits the dataset 3x
     (1 full-gradient pass + 2n inner visits when M̃ = 2n). The history is
     recorded with the fixed-order loss so `repro.core.sweep` reproduces it
-    bit-identically from a single batched compilation.
+    bit-identically from a single batched compilation. `AsyRunResult.w` is
+    the FLAT iterate; pytree objectives unravel it via
+    ``obj.unravel_params``.
     """
-    w = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+    w = obj.init_flat() if w0 is None else obj.as_flat(w0)
     key = jax.random.PRNGKey(seed)
 
     _, _, total, _ = _resolve_steps(obj, cfg)
@@ -250,9 +259,10 @@ def run_asysvrg(obj: LogisticRegression, epochs: int, cfg: SVRGConfig,
     # epoch visits the dataset 3x (1 snapshot pass + 2n inner visits)
     passes_per_epoch = 1.0 + total / obj.n
 
+    data = obj.data_args()
     epoch_fn = jax.jit(lambda w, k: asysvrg_epoch(
         obj, w, k, cfg, delay_kind=delay_kind, drop_prob=drop_prob))
-    loss_fn = jax.jit(lambda w: loss_fixed_order(obj.X, obj.y, obj.l2, w))
+    loss_fn = jax.jit(lambda w: obj.flat_loss(data, w))
 
     history = [float(loss_fn(w))]
     passes = [0.0]

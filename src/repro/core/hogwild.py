@@ -32,11 +32,7 @@ from repro.core.asysvrg import (
     _delay_schedule_core,
     read_dispatch,
 )
-from repro.core.objective import (
-    LogisticRegression,
-    loss_fixed_order,
-    sample_grad_stable,
-)
+from repro.core.objective import Objective
 
 
 def _resolve_hogwild_steps(n: int, num_threads: int, tau: int):
@@ -50,15 +46,20 @@ def _resolve_hogwild_steps(n: int, num_threads: int, tau: int):
     return p_threads, total, tau
 
 
-def _hogwild_epoch_core(X, y, l2: float, w, key, gamma, tau, scheme_id,
+def _hogwild_epoch_core(obj: Objective, data, w, key, gamma, tau, scheme_id,
                         delay_id, *, total: int, buf_len: int,
                         drop_prob: float):
     """One Hogwild! epoch (total async updates), vmap-able over configs.
 
+    ``obj``/``data`` follow the same protocol split as
+    `asysvrg._epoch_core`: pure methods + static config from ``obj``, every
+    numeric input in ``data``, params as the objective's FLAT vector.
+
     Dynamic (batchable): w, key, gamma, tau, scheme_id, delay_id.
     Static (shared by the batch): total, buf_len ≥ max τ + 1, drop_prob.
     """
-    n, dim = X.shape
+    n = obj.num_samples(data)
+    dim = w.shape[0]
     k_idx, k_delay, k_scan = jax.random.split(key, 3)
     idx = jax.random.randint(k_idx, (total,), 0, n)
     delays = _delay_schedule_core(delay_id, total, tau, k_delay)
@@ -70,7 +71,7 @@ def _hogwild_epoch_core(X, y, l2: float, w, key, gamma, tau, scheme_id,
         k_read, k_drop = jax.random.split(k)
         a = jnp.maximum(m - d, 0)
         u_read = read_dispatch(scheme_id, buffer, tau, a, m, k_read, dim)
-        v = sample_grad_stable(X, y, l2, u_read, i)
+        v = obj.flat_sample_grad(data, i, u_read)
         if drop_prob > 0:
             # unlock write-write race: drop a random coordinate fraction
             keep = jax.random.bernoulli(
@@ -87,7 +88,7 @@ def _hogwild_epoch_core(X, y, l2: float, w, key, gamma, tau, scheme_id,
     return u_last
 
 
-def _hogwild_epochs_core(X, y, l2: float, w0, key, gamma0, decay, tau,
+def _hogwild_epochs_core(obj: Objective, data, w0, key, gamma0, decay, tau,
                          scheme_id, delay_id, *, epochs: int, total: int,
                          buf_len: int, drop_prob: float, row_epochs=None):
     """`epochs` Hogwild! epochs as one `lax.scan`, γ ← decay·γ in the carry.
@@ -104,7 +105,7 @@ def _hogwild_epochs_core(X, y, l2: float, w0, key, gamma0, decay, tau,
     shorter budget is bit-identical to an independent shorter run while
     scanning to the group's shared static bound.
     """
-    loss0 = loss_fixed_order(X, y, l2, w0)
+    loss0 = obj.flat_loss(data, w0)
     bound = jnp.int32(epochs) if row_epochs is None else row_epochs
 
     def step(carry, e):
@@ -112,11 +113,11 @@ def _hogwild_epochs_core(X, y, l2: float, w0, key, gamma0, decay, tau,
         key, sub = jax.random.split(key)
         active = e < bound
         w_new = _hogwild_epoch_core(
-            X, y, l2, w, sub, gamma, tau, scheme_id, delay_id,
+            obj, data, w, sub, gamma, tau, scheme_id, delay_id,
             total=total, buf_len=buf_len, drop_prob=drop_prob)
         w_next = jnp.where(active, w_new, w)
         gamma_next = jnp.where(active, gamma * decay, gamma)
-        loss_next = jnp.where(active, loss_fixed_order(X, y, l2, w_next),
+        loss_next = jnp.where(active, obj.flat_loss(data, w_next),
                               loss_prev)
         return (w_next, key, gamma_next, loss_next), loss_next
 
@@ -125,7 +126,7 @@ def _hogwild_epochs_core(X, y, l2: float, w0, key, gamma0, decay, tau,
     return w_fin, jnp.concatenate([loss0[None], losses])
 
 
-def hogwild_epoch(obj: LogisticRegression, w, key, step_size: float,
+def hogwild_epoch(obj: Objective, w, key, step_size: float,
                   num_threads: int, tau: int = -1, scheme: str = "unlock",
                   drop_prob: float = 0.02, delay_kind: str = "fixed"):
     """One Hogwild! epoch (public single-config wrapper over the core)."""
@@ -136,13 +137,13 @@ def hogwild_epoch(obj: LogisticRegression, w, key, step_size: float,
     _, total, tau = _resolve_hogwild_steps(obj.n, num_threads, tau)
     delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
     return _hogwild_epoch_core(
-        obj.X, obj.y, obj.l2, w, key,
+        obj, obj.data_args(), obj.as_flat(w), key,
         jnp.float32(step_size), jnp.int32(tau),
         jnp.int32(SCHEME_IDS[scheme]), jnp.int32(delay_id),
         total=total, buf_len=tau + 1, drop_prob=drop_prob)
 
 
-def run_hogwild(obj: LogisticRegression, epochs: int, step_size: float,
+def run_hogwild(obj: Objective, epochs: int, step_size: float,
                 num_threads: int = 8, decay: float = 0.9,
                 scheme: str = "unlock", tau: int = -1, seed: int = 0,
                 w0=None, delay_kind: str = "fixed",
@@ -159,13 +160,14 @@ def run_hogwild(obj: LogisticRegression, epochs: int, step_size: float,
         raise ValueError(f"unknown scheme {scheme!r}")
     if delay_kind not in DELAY_IDS:
         raise ValueError(f"unknown delay schedule {delay_kind!r}")
-    w = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+    w = obj.init_flat() if w0 is None else obj.as_flat(w0)
     key = jax.random.PRNGKey(seed)
     _, total, tau = _resolve_hogwild_steps(obj.n, num_threads, tau)
     delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
+    data = obj.data_args()
 
     runner = jax.jit(lambda w0_, k, g0, d: _hogwild_epochs_core(
-        obj.X, obj.y, obj.l2, w0_, k, g0, d,
+        obj, data, w0_, k, g0, d,
         jnp.int32(tau), jnp.int32(SCHEME_IDS[scheme]), jnp.int32(delay_id),
         epochs=epochs, total=total, buf_len=tau + 1, drop_prob=drop_prob))
     w_fin, losses = runner(w, key, jnp.float32(step_size),

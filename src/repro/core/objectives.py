@@ -1,0 +1,241 @@
+"""Beyond-paper objectives on the pluggable protocol: an MLP language model
+(pytree params, nonconvex) and a nonconvex-regularized logistic regression.
+
+These are the ROADMAP's "nonconvex / deep workloads" onboarding: Huo & Huang
+(1604.03584), Lian et al. (1506.08272) and Reddi et al. (1506.06840) show
+that the AsySVRG/Hogwild! semantics this repo reproduces extend to nonconvex
+objectives — the engine never assumed convexity, only the objective plumbing
+did. Both classes obey the vmap-bitwise-stable contract documented in
+`repro.core.objective`, so they inherit every engine guarantee the paper
+workload has: sweep rows bit-identical across batch compositions, coalesced
+service requests bit-identical to standalone runs, sharded == unsharded, and
+bit-exact HTTP wire round-trips (tests/test_objective_protocol.py,
+tests/test_sweep_sharded.py).
+
+Stability-dictated formulations (see the prototype notes in the protocol
+docstring): matmuls are broadcast-multiply + trailing-axis reduces, the
+embedding lookup is a one-hot matmul (AD of a gather is a scatter-add whose
+batched bit behaviour we do not control; AD of the one-hot matmul is another
+stable matmul), and all scalar/sample accumulations run through
+`_fixed_order_sum`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import (
+    Objective,
+    _fixed_order_sum,
+    _log1pexp,
+    _margins_stable,
+)
+from repro.models.layers import _act, rmsnorm
+
+
+def _stable_matmul(x, W):
+    """``x @ W`` with bits stable under a leading vmap batch axis.
+
+    x [..., A, D] @ W [D, B] -> [..., A, B] as an elementwise broadcast
+    product reduced over the TRAILING axis — each output element sums its D
+    terms in index order, which XLA:CPU keeps bitwise identical with and
+    without extra leading batch axes (plain dot_general does not).
+    """
+    return jnp.sum(x[..., :, None, :] * W.T[None, :, :], axis=-1)
+
+
+class MLPObjective(Objective):
+    """Tiny MLP language model over a packed token corpus (pytree params).
+
+    One sample = one packed sequence; the per-sample loss is the mean token
+    cross-entropy of next-token prediction through
+
+        one_hot(tokens) @ embed -> rmsnorm -> act(x @ w1 + b1) @ w2 -> CE
+
+    with the rmsnorm/activation taken from `repro.models.layers`. Params
+    are a flat dict pytree {embed, norm, w1, b1, w2}; gradients come from
+    `jax.grad` of the stable forward, which keeps the whole objective
+    vmap-bitwise-stable (pinned in tests). The loss is NONCONVEX — this is
+    the workload class the nonconvex async-SVRG analyses cover.
+
+    ``tokens``/``targets`` are [n, S] int32 arrays, e.g. a materialized
+    slice of `repro.data.synthetic_lm.SyntheticLMDataset` (see
+    :func:`mlp_lm_objective`).
+    """
+
+    def __init__(self, tokens, targets, vocab_size: int, *,
+                 d_model: int = 16, d_hidden: int = 32,
+                 activation: str = "relu", init_seed: int = 0,
+                 init_scale: float = 0.1):
+        tokens = np.asarray(tokens)
+        targets = np.asarray(targets)
+        if tokens.shape != targets.shape or tokens.ndim != 2:
+            raise ValueError(
+                f"tokens/targets must be matching [n, S] arrays, got "
+                f"{tokens.shape} / {targets.shape}")
+        if tokens.min() < 0 or tokens.max() >= vocab_size:
+            raise ValueError("token ids out of range for vocab_size="
+                             f"{vocab_size}")
+        self.tokens = jnp.asarray(tokens, jnp.int32)
+        self.targets = jnp.asarray(targets, jnp.int32)
+        self.n, self.seq_len = tokens.shape
+        self.vocab_size = int(vocab_size)
+        self.d_model = int(d_model)
+        self.d_hidden = int(d_hidden)
+        self.activation = str(activation)
+        self.init_seed = int(init_seed)
+        self.init_scale = float(init_scale)
+
+    # -- protocol ------------------------------------------------------------
+    def data_args(self) -> Tuple:
+        return (self.tokens, self.targets)
+
+    def init_params(self) -> Dict:
+        k_embed, k_w1, k_w2 = jax.random.split(
+            jax.random.PRNGKey(self.init_seed), 3)
+        s = self.init_scale
+        return {
+            "embed": s * jax.random.normal(
+                k_embed, (self.vocab_size, self.d_model)),
+            "norm": jnp.zeros((self.d_model,)),
+            "w1": s * jax.random.normal(
+                k_w1, (self.d_model, self.d_hidden)),
+            "b1": jnp.zeros((self.d_hidden,)),
+            "w2": s * jax.random.normal(
+                k_w2, (self.d_hidden, self.vocab_size)),
+        }
+
+    def static_key(self) -> Tuple:
+        return (self.vocab_size, self.d_model, self.d_hidden,
+                self.activation, self.init_seed, self.init_scale)
+
+    def _sample_loss(self, data, i, w):
+        """Mean token CE of sequence i — every reduce trailing/fixed-order."""
+        tokens, targets = data
+        tok = tokens[i]
+        tgt = targets[i]
+        oh = jax.nn.one_hot(tok, self.vocab_size, dtype=jnp.float32)
+        x = _stable_matmul(oh, w["embed"])            # [S, D]
+        x = rmsnorm(x, w["norm"])
+        h = _act(self.activation,
+                 _stable_matmul(x, w["w1"]) + w["b1"])  # [S, H]
+        logits = _stable_matmul(h, w["w2"])           # [S, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)       # trailing row-reduce
+        gold = jnp.take_along_axis(logits, tgt[:, None], axis=-1)[:, 0]
+        return _fixed_order_sum(lse - gold) / self.seq_len
+
+    def loss_fixed_order(self, data, w):
+        """f(w) = (1/n) Σ_i CE_i(w), accumulated strictly in sample order."""
+        n = self.num_samples(data)
+
+        def body(acc, i):
+            return acc + self._sample_loss(data, i, w), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros(()), jnp.arange(n))
+        return total / n
+
+    def full_grad_stable(self, data, w):
+        """∇f(w): per-sample grads accumulated in fixed sample order (a
+        lax.scan of `jax.grad` calls — order-deterministic, so stable)."""
+        n = self.num_samples(data)
+        grad_i = jax.grad(lambda wi, i: self._sample_loss(data, i, wi))
+
+        def body(acc, i):
+            g = grad_i(w, i)
+            return jax.tree.map(jnp.add, acc, g), None
+
+        zeros = jax.tree.map(jnp.zeros_like, w)
+        total, _ = jax.lax.scan(body, zeros, jnp.arange(n))
+        return jax.tree.map(lambda g: g / n, total)
+
+    def sample_grad_stable(self, data, i, w):
+        return jax.grad(lambda wi: self._sample_loss(data, i, wi))(w)
+
+
+def mlp_lm_objective(n: int = 64, *, vocab_size: int = 32, seq_len: int = 8,
+                     d_model: int = 16, d_hidden: int = 32,
+                     activation: str = "relu", seed: int = 0,
+                     init_seed: int = 0) -> MLPObjective:
+    """An `MLPObjective` over a materialized `SyntheticLMDataset` slice:
+    ``n`` deterministic packed sequences (counter-based — same (seed, n)
+    always yields the same corpus, restart- and process-independent)."""
+    from repro.data.synthetic_lm import SyntheticLMDataset
+
+    ds = SyntheticLMDataset(vocab_size=vocab_size, seq_len=seq_len,
+                            global_batch=n, seed=seed)
+    batch = ds.batch_at(0)
+    return MLPObjective(batch["tokens"], batch["targets"], vocab_size,
+                        d_model=d_model, d_hidden=d_hidden,
+                        activation=activation, init_seed=init_seed)
+
+
+class NonconvexLogistic(Objective):
+    """Logistic loss + a smoothly-clipped (log-penalty style) NONCONVEX
+    regularizer on the libsvm sets:
+
+        f(w) = (1/n) Σ_i log(1 + exp(-y_i x_i·w)) + λ Σ_j α w_j² / (1 + α w_j²)
+
+    The regularizer saturates at λ per coordinate (the "corrected"/clipped
+    penalty family the nonconvex SVRG papers analyze — Reddi et al.
+    1506.06840 §5; it is bounded, smooth, and nonconvex), so large weights
+    stop being pushed toward zero — a sparsity-friendlier prior than ℓ2.
+    Params are a single flat (p,) vector; like `LogisticRegression` the
+    flat adapters run with zero ravel indirection. α controls the clip
+    sharpness; α→0 with λ/α fixed recovers ridge.
+    """
+
+    def __init__(self, X, y, *, lam: float = 1e-3, alpha: float = 10.0):
+        self.X = jnp.asarray(X)
+        self.y = jnp.asarray(y)
+        self.lam = float(lam)
+        self.alpha = float(alpha)
+        self.n, self.p = self.X.shape
+
+    # -- protocol ------------------------------------------------------------
+    def data_args(self) -> Tuple:
+        return (self.X, self.y, jnp.float32(self.lam),
+                jnp.float32(self.alpha))
+
+    def init_params(self):
+        return jnp.zeros(self.p)
+
+    def static_key(self) -> Tuple:
+        return ()
+
+    def _penalty(self, lam, alpha, w):
+        aw2 = alpha * w * w
+        return lam * _fixed_order_sum(aw2 / (1.0 + aw2))
+
+    def _penalty_grad(self, lam, alpha, w):
+        den = 1.0 + alpha * w * w
+        return lam * 2.0 * alpha * w / (den * den)
+
+    def loss_fixed_order(self, data, w):
+        X, y, lam, alpha = data
+        t = _log1pexp(-_margins_stable(X, y, w))
+        return (_fixed_order_sum(t) / X.shape[0]
+                + self._penalty(lam, alpha, w))
+
+    def full_grad_stable(self, data, w):
+        X, y, lam, alpha = data
+        n = X.shape[0]
+        s = jax.nn.sigmoid(-_margins_stable(X, y, w))
+        return (jnp.sum((-(y * s))[:, None] * X, axis=0) / n
+                + self._penalty_grad(lam, alpha, w))
+
+    def sample_grad_stable(self, data, i, w):
+        X, y, lam, alpha = data
+        x = X[i]
+        yi = y[i]
+        s = jax.nn.sigmoid(-yi * jnp.sum(x * w))
+        return -yi * s * x + self._penalty_grad(lam, alpha, w)
+
+    # flat == pytree for a (p,) parameter vector: skip the generic bridge
+    flat_loss = loss_fixed_order
+    flat_full_grad = full_grad_stable
+
+    def flat_sample_grad(self, data, i, w_flat):
+        return self.sample_grad_stable(data, i, w_flat)

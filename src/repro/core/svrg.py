@@ -23,7 +23,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.objective import LogisticRegression
+from repro.core.objective import Objective
+from repro.utils.tree import tree_zeros_like
 
 
 def sweep_spec(step_size: float, num_inner: Optional[int] = None,
@@ -46,7 +47,7 @@ class SVRGEpochStats(NamedTuple):
     effective_passes: jnp.ndarray
 
 
-def svrg_epoch(obj: LogisticRegression, w, key, step_size: float,
+def svrg_epoch(obj: Objective, w, key, step_size: float,
                num_inner: int, option: int = 2):
     """One outer iteration of Algorithm 1 with p=1.
 
@@ -54,6 +55,11 @@ def svrg_epoch(obj: LogisticRegression, w, key, step_size: float,
     v_m = ∇f_{i_m}(u_m) − ∇f_{i_m}(u_0) + μ ;  u_{m+1} = u_m − η v_m.
     Option 1 returns the last iterate, option 2 the average (the paper's
     analysis uses option 2).
+
+    ``w`` is the objective's param PYTREE (any single array is its own
+    tree, so flat-vector objectives see the exact pre-protocol graphs —
+    `jax.tree.map` over a bare array IS the plain op); the update/average
+    arithmetic is leaf-wise, so MLP-style nested params run unchanged.
     """
     mu = obj.full_grad(w)
     u0 = w
@@ -61,22 +67,28 @@ def svrg_epoch(obj: LogisticRegression, w, key, step_size: float,
 
     def body(carry, i):
         u, acc = carry
-        v = obj.sample_grad(u, i) - obj.sample_grad(u0, i) + mu
-        u_next = u - step_size * v
-        return (u_next, acc + u), None
+        gu = obj.sample_grad(u, i)
+        g0 = obj.sample_grad(u0, i)
+        u_next = jax.tree.map(
+            lambda ul, gul, g0l, mul: ul - step_size * (gul - g0l + mul),
+            u, gu, g0, mu)
+        return (u_next, jax.tree.map(jnp.add, acc, u)), None
 
-    (u_last, acc), _ = jax.lax.scan(body, (u0, jnp.zeros_like(u0)), idx)
+    (u_last, acc), _ = jax.lax.scan(body, (u0, tree_zeros_like(u0)), idx)
     if option == 1:
         return u_last
-    return acc / num_inner
+    return jax.tree.map(lambda a: a / num_inner, acc)
 
 
-def run_svrg(obj: LogisticRegression, epochs: int, step_size: float,
+def run_svrg(obj: Objective, epochs: int, step_size: float,
              num_inner: Optional[int] = None, option: int = 2,
              seed: int = 0, w0=None):
-    """Run SVRG for `epochs` outer iterations; returns (w, per-epoch loss)."""
+    """Run SVRG for `epochs` outer iterations; returns (w, per-epoch loss).
+
+    ``w``/``w0`` live in the objective's pytree param space (a bare (p,)
+    vector for the flat objectives)."""
     num_inner = num_inner or 2 * obj.n
-    w = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+    w = obj.init_params() if w0 is None else w0
     key = jax.random.PRNGKey(seed)
     history = [float(obj.loss(w))]
     epoch_fn = jax.jit(

@@ -53,7 +53,7 @@ BIT-IDENTICAL to sequential `run_asysvrg` / `run_hogwild` calls with the
 same specs (tests/test_sweep.py, tests/test_sweep_hogwild.py), and the
 sharded dispatch is bit-identical per row to the unsharded path
 (tests/test_sweep_sharded.py, under forced multi-device CPU). The contract
-holds because both epoch cores and `loss_fixed_order` only use reductions
+holds because both epoch cores and every objective's loss only use reductions
 whose bits survive vmap batching (see repro.core.objective) — and because
 each row's arithmetic is device-local under `shard_map` (no cross-row
 collectives). It is CALIBRATED AGAINST XLA:CPU reduction behaviour and must
@@ -71,11 +71,12 @@ bits. A grid over schemes / seeds / steps / τ / delay-kinds / epochs at one
 thread count is one group per algo.
 
 **Persistent compiled runners.** The group bodies (`_asysvrg_group_fn` /
-`_hogwild_group_fn`) close over HASHABLE STATICS ONLY — ``X``/``y``/``l2``
-and the per-row ``w0`` enter as runtime arguments — and every dispatch goes
-through the module-level runner cache in `repro.service.cache`, keyed on
-(engine, M̃, option, buf_len, epochs-bound, drop_prob, mesh fingerprint,
-data shape/dtype). A repeated same-shape `run_sweep` therefore reuses the
+`_hogwild_group_fn`) close over the objective's PURE methods + static
+config only — the ``obj.data_args()`` tuple and the per-row ``w0`` enter
+as runtime arguments — and every dispatch goes through the module-level
+runner cache in `repro.service.cache`, keyed on (engine, M̃, option,
+buf_len, epochs-bound, drop_prob, mesh fingerprint, objective static key,
+data shapes/dtypes). A repeated same-shape `run_sweep` therefore reuses the
 previous call's jitted runner and compiles NOTHING (tests/test_service.py
 counts traces to prove it), and the `repro.service` scheduler coalesces
 many clients' specs through the same runners.
@@ -99,7 +100,7 @@ from repro.core.asysvrg import (
     _resolve_steps,
 )
 from repro.core.hogwild import _hogwild_epochs_core, _resolve_hogwild_steps
-from repro.core.objective import LogisticRegression, loss_fixed_order
+from repro.core.objective import Objective, get_objective, params_from_flat
 from repro.sharding.context import current_mesh
 
 ALGOS = ("asysvrg", "hogwild", "svrg")
@@ -125,6 +126,13 @@ class SweepSpec:
     ``decay`` is the per-epoch γ ← decay·γ factor (hogwild only).
     ``epochs`` is this row's outer-epoch budget; 0 inherits `run_sweep`'s
     ``epochs`` argument. Rows of one call may disagree (masked epochs).
+    ``objective`` optionally names a REGISTERED objective
+    (`repro.core.objective.register_objective`) — the wire-addressable form
+    the HTTP tier uses; "" means "the objective the call passes in". All
+    rows of one plan must resolve to ONE objective (the result arrays are
+    rectangular in its flat dim); submit separate requests to sweep several
+    objectives — the service scheduler keeps them in distinct groups via
+    the objective fingerprint in the group key.
     """
     seed: int = 0
     scheme: str = "inconsistent"
@@ -137,6 +145,7 @@ class SweepSpec:
     algo: str = "asysvrg"
     decay: float = 0.9
     epochs: int = 0
+    objective: str = ""
 
     def to_config(self) -> SVRGConfig:
         return SVRGConfig(scheme=self.scheme, step_size=self.step_size,
@@ -156,14 +165,23 @@ class SweepResult(NamedTuple):
     specs: Tuple[SweepSpec, ...]
     histories: np.ndarray         # [C, max_epochs+1] loss after each epoch
     effective_passes: np.ndarray  # [C, max_epochs+1] cumulative eff. passes
-    final_w: np.ndarray           # [C, p]
+    final_w: np.ndarray           # [C, flat_dim] FLAT final iterates
     total_updates: np.ndarray     # [C] updates applied over all row epochs
     epochs_per_row: np.ndarray    # [C] each row's executed epoch budget
+    param_shapes: Tuple = ()      # objective's ((path, shape, dtype), ...)
 
     def curve(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
         """(effective_passes, loss history) trimmed to row c's own budget."""
         e = int(self.epochs_per_row[c])
         return self.effective_passes[c, :e + 1], self.histories[c, :e + 1]
+
+    def final_params(self, c: int):
+        """Row c's final iterate in the objective's PYTREE form, rebuilt
+        bit-exactly from the flat row via the recorded ``param_shapes``
+        (flat-vector objectives get the row back unchanged)."""
+        if not self.param_shapes:
+            return self.final_w[c]
+        return params_from_flat(self.final_w[c], self.param_shapes)
 
     def row(self, c: int) -> Dict:
         """One config as a flat record (for CSV-ish reporting)."""
@@ -185,7 +203,8 @@ def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
               option: int = 2,
               algo: str = "asysvrg",
               decay: float = 0.9,
-              epochs: int = 0) -> List[SweepSpec]:
+              epochs: int = 0,
+              objective: str = "") -> List[SweepSpec]:
     """Cartesian grid over the paper's experiment axes, outermost-first.
 
     The ``taus`` axis uses ONE convention for every algo: 0 means "derive
@@ -200,7 +219,7 @@ def make_grid(schemes: Sequence[str] = ("consistent", "inconsistent", "unlock"),
         SweepSpec(seed=seed, scheme=scheme, step_size=step, tau=tau,
                   delay_kind=kind, num_threads=num_threads,
                   inner_steps=inner_steps, option=option, algo=algo,
-                  decay=decay, epochs=epochs)
+                  decay=decay, epochs=epochs, objective=objective)
         for scheme in schemes
         for seed in seeds
         for step in step_sizes
@@ -260,7 +279,7 @@ def _normalize_spec(spec: SweepSpec) -> SweepSpec:
     return spec
 
 
-def _resolve(obj: LogisticRegression, spec: SweepSpec,
+def _resolve(obj: Objective, spec: SweepSpec,
              default_epochs: int) -> _Resolved:
     """Per-spec resolution, delegating to each algorithm's own arithmetic.
 
@@ -308,7 +327,11 @@ def _executed_spec(spec: SweepSpec, r: _Resolved) -> SweepSpec:
                                epochs=r.epochs)
 
 
-_GroupKey = Tuple[str, int, int, int]     # (engine, M̃, option, buf_len)
+# (objective fingerprint, engine, M̃, option, buf_len) — the fingerprint
+# covers the objective's static config AND data bytes, so the service
+# scheduler can pool rows from different requests without ever coalescing
+# two objectives (or two datasets) into one compiled dispatch.
+_GroupKey = Tuple[int, str, int, int, int]
 
 
 class SweepPlan(NamedTuple):
@@ -316,30 +339,57 @@ class SweepPlan(NamedTuple):
     specs: Tuple[SweepSpec, ...]          # normalized, executed-semantics
     resolved: Tuple[_Resolved, ...]
     groups: Dict[_GroupKey, List[int]]    # group key -> member row indices
+    objective: Objective                  # the ONE objective every row runs
 
     def group_epochs(self, key: _GroupKey) -> int:
         """A group's static scan bound: max member epoch budget."""
         return max(self.resolved[c].epochs for c in self.groups[key])
 
 
-def plan_sweep(obj: LogisticRegression, epochs: int,
+def _resolve_objective(obj: Optional[Objective],
+                       specs: Sequence[SweepSpec]) -> Objective:
+    """The plan's single objective: named specs resolve via the registry,
+    "" means the caller's ``obj``; mixing objectives in one plan raises
+    (results are rectangular in ONE flat dim — submit separate sweeps)."""
+    names = {s.objective for s in specs}
+    resolved: Dict[str, Objective] = {}
+    for name in sorted(names - {""}):
+        resolved[name] = get_objective(name)
+    if "" in names:
+        if obj is None:
+            raise ValueError(
+                "specs with objective='' need an explicit objective argument")
+        resolved[""] = obj
+    fps = {o.fingerprint() for o in resolved.values()}
+    if len(fps) > 1:
+        raise ValueError(
+            f"one sweep, one objective: specs name {sorted(names)} which "
+            "resolve to different objectives — submit separate sweeps")
+    return next(iter(resolved.values()))
+
+
+def plan_sweep(obj: Optional[Objective], epochs: int,
                specs: Sequence[SweepSpec]) -> SweepPlan:
     """Normalize + resolve specs and group them by compiled-program shape.
 
     Exposed for tests and capacity planning: the group keys are the static
-    dims (engine, M̃, option, buf_len), all pinned per-row, so a row's key
-    never depends on which other rows share the sweep.
+    dims (objective fingerprint, engine, M̃, option, buf_len), all pinned
+    per-row, so a row's key never depends on which other rows share the
+    sweep. ``obj`` may be None when every spec names a registered objective.
     """
     specs = tuple(_normalize_spec(s) for s in specs)
     if not specs:
         raise ValueError("empty sweep")
+    obj = _resolve_objective(obj, specs)
+    ofp = obj.fingerprint()
     resolved = tuple(_resolve(obj, s, epochs) for s in specs)
     specs = tuple(_executed_spec(s, r) for s, r in zip(specs, resolved))
     groups: Dict[_GroupKey, List[int]] = {}
     for c, r in enumerate(resolved):
-        groups.setdefault((r.engine, r.total, r.option, r.buf_len),
+        groups.setdefault((ofp, r.engine, r.total, r.option, r.buf_len),
                           []).append(c)
-    return SweepPlan(specs=specs, resolved=resolved, groups=groups)
+    return SweepPlan(specs=specs, resolved=resolved, groups=groups,
+                     objective=obj)
 
 
 def _active_mesh(mesh: Optional[Mesh]) -> Optional[Mesh]:
@@ -367,39 +417,43 @@ def _pad_rows(args: Tuple[jnp.ndarray, ...], pad: int):
     return tuple(jnp.concatenate([a] + [a[:1]] * pad, axis=0) for a in args)
 
 
-# row-leading runtime arguments per engine (after the X, y, l2 data args)
+# row-leading runtime arguments per engine (after the objective data args)
 _NUM_ROW_ARGS = {_ENGINE_ASYSVRG: 7, _ENGINE_HOGWILD: 8}
 
 
-def _asysvrg_group_fn(epochs: int, total: int, buf_len: int, option: int,
-                      drop_prob: float):
+def _asysvrg_group_fn(obj: Objective, num_data: int, epochs: int, total: int,
+                      buf_len: int, option: int, drop_prob: float):
     """vmap(per-config masked epochs-scan) for one asysvrg/svrg group.
 
-    Closes over HASHABLE STATICS ONLY — the data (X, y, l2) and every
-    per-row array are runtime arguments — so the returned function can live
-    in the persistent runner cache (repro.service.cache) and repeated
-    same-shape sweeps reuse one compiled program.
+    Closes over the objective's PURE methods + static config ONLY — the
+    data tuple (``obj.data_args()``-shaped, ``num_data`` leading arguments)
+    and every per-row array are runtime arguments — so the returned
+    function can live in the persistent runner cache (repro.service.cache)
+    and any same-``runner_static_key`` objective's data reuses one compiled
+    program.
     """
 
-    def group(X, y, l2, keys, etas, taus, scheme_ids, delay_ids, row_epochs,
-              w0_rows):
+    def group(*all_args):
+        data = all_args[:num_data]
+        keys, etas, taus, scheme_ids, delay_ids, row_epochs, w0_rows = \
+            all_args[num_data:]
+
         def per_config(key, eta, tau, scheme_id, delay_id, row_epochs, w0):
-            loss0 = loss_fixed_order(X, y, l2, w0)
+            loss0 = obj.flat_loss(data, w0)
 
             def step(carry, e):
                 w, key, loss_prev = carry
                 key, sub = jax.random.split(key)
                 active = e < row_epochs
                 w_new = _epoch_core(
-                    X, y, l2, w, sub, eta, tau, scheme_id, delay_id,
+                    obj, data, w, sub, eta, tau, scheme_id, delay_id,
                     total=total, buf_len=buf_len, option=option,
                     drop_prob=drop_prob)
                 # frozen rows: carry passthrough + masked loss write (the
                 # last live loss is re-emitted), so a row with a shorter
                 # budget is bit-identical to an independent shorter run
                 w_next = jnp.where(active, w_new, w)
-                loss_next = jnp.where(active,
-                                      loss_fixed_order(X, y, l2, w_next),
+                loss_next = jnp.where(active, obj.flat_loss(data, w_next),
                                       loss_prev)
                 return (w_next, key, loss_next), loss_next
 
@@ -413,18 +467,21 @@ def _asysvrg_group_fn(epochs: int, total: int, buf_len: int, option: int,
     return group
 
 
-def _hogwild_group_fn(epochs: int, total: int, buf_len: int,
-                      drop_prob: float):
-    """vmap(multi-epoch Hogwild! scan, γ-decay in the carry); hashable
+def _hogwild_group_fn(obj: Objective, num_data: int, epochs: int, total: int,
+                      buf_len: int, drop_prob: float):
+    """vmap(multi-epoch Hogwild! scan, γ-decay in the carry); pure methods +
     statics only — data and row arrays enter at call time (see
     `_asysvrg_group_fn`)."""
 
-    def group(X, y, l2, keys, gammas, decays, taus, scheme_ids, delay_ids,
-              row_epochs, w0_rows):
+    def group(*all_args):
+        data = all_args[:num_data]
+        (keys, gammas, decays, taus, scheme_ids, delay_ids, row_epochs,
+         w0_rows) = all_args[num_data:]
+
         def per_config(key, gamma0, decay, tau, scheme_id, delay_id,
                        row_epochs, w0):
             return _hogwild_epochs_core(
-                X, y, l2, w0, key, gamma0, decay, tau, scheme_id, delay_id,
+                obj, data, w0, key, gamma0, decay, tau, scheme_id, delay_id,
                 epochs=epochs, total=total, buf_len=buf_len,
                 drop_prob=drop_prob, row_epochs=row_epochs)
 
@@ -434,18 +491,20 @@ def _hogwild_group_fn(epochs: int, total: int, buf_len: int,
     return group
 
 
-def _group_fn(engine: str, *, epochs: int, total: int, buf_len: int,
-              option: int, drop_prob: float):
+def _group_fn(engine: str, *, obj: Objective, num_data: int, epochs: int,
+              total: int, buf_len: int, option: int, drop_prob: float):
     """(unjitted group body, row-arg count) for the runner cache."""
     if engine == _ENGINE_HOGWILD:
-        return (_hogwild_group_fn(epochs, total, buf_len, drop_prob),
+        return (_hogwild_group_fn(obj, num_data, epochs, total, buf_len,
+                                  drop_prob),
                 _NUM_ROW_ARGS[engine])
-    return (_asysvrg_group_fn(epochs, total, buf_len, option, drop_prob),
+    return (_asysvrg_group_fn(obj, num_data, epochs, total, buf_len, option,
+                              drop_prob),
             _NUM_ROW_ARGS[engine])
 
 
-def _shard_group_fn(fn, mesh: Mesh, num_row: int):
-    """shard_map the group body: data args (X, y, l2) replicate, every
+def _shard_group_fn(fn, mesh: Mesh, num_data: int, num_row: int):
+    """shard_map the group body: the objective's data args replicate, every
     row-leading input/output shards over `data`.
 
     Each device runs the identical program over its row shard and NO
@@ -456,7 +515,7 @@ def _shard_group_fn(fn, mesh: Mesh, num_row: int):
     """
     spec = P(_DATA_AXIS)
     return shard_map(fn, mesh=mesh,
-                     in_specs=(P(), P(), P()) + (spec,) * num_row,
+                     in_specs=(P(),) * num_data + (spec,) * num_row,
                      out_specs=(spec, spec),
                      check_rep=False)
 
@@ -495,13 +554,13 @@ def _write_row_history(dst_row: np.ndarray, hist_row: np.ndarray,
         dst_row[group_epochs + 1:] = hist_row[-1]
 
 
-def _dispatch_group(obj: LogisticRegression, specs: Sequence[SweepSpec],
+def _dispatch_group(obj: Objective, specs: Sequence[SweepSpec],
                     resolved: Sequence[_Resolved], members: Sequence[int],
                     key_: _GroupKey, group_epochs: int, w_init,
                     drop_prob: float, mesh: Optional[Mesh]):
-    """Run ONE (engine, M̃, option, buf_len) group through the persistent
-    runner cache; returns (histories [rows, group_epochs+1], final_w
-    [rows, p]) as numpy, padding rows already sliced off.
+    """Run ONE (objective, engine, M̃, option, buf_len) group through the
+    persistent runner cache; returns (histories [rows, group_epochs+1],
+    final_w [rows, flat_dim]) as numpy, padding rows already sliced off.
 
     ``specs``/``resolved`` are row-aligned sequences indexed by ``members``
     — `run_sweep` passes a single plan's rows, the service scheduler a
@@ -511,7 +570,7 @@ def _dispatch_group(obj: LogisticRegression, specs: Sequence[SweepSpec],
     """
     from repro.service.cache import get_group_runner
 
-    engine, total, option, buf_len = key_
+    _, engine, total, option, buf_len = key_
     keys = jax.vmap(jax.random.PRNGKey)(
         jnp.asarray([specs[c].seed for c in members]))
     etas = jnp.asarray([specs[c].step_size for c in members], jnp.float32)
@@ -534,20 +593,20 @@ def _dispatch_group(obj: LogisticRegression, specs: Sequence[SweepSpec],
 
     runner = get_group_runner(engine, group_epochs=group_epochs, total=total,
                               option=option, buf_len=buf_len,
-                              drop_prob=drop_prob, mesh=mesh,
-                              X=obj.X, y=obj.y)
+                              drop_prob=drop_prob, mesh=mesh, obj=obj)
     if mesh is not None:
         # pad the row axis to a multiple of the data-axis size; padded rows
         # replicate row 0 and are sliced off below
         args = _pad_rows(args, -len(members) % int(mesh.shape[_DATA_AXIS]))
-    w_fin, hist = runner(obj.X, obj.y, jnp.float32(obj.l2), *args)
+    w_fin, hist = runner(*obj.data_args(), *args)
     return (np.asarray(hist)[:len(members)],
             np.asarray(w_fin)[:len(members)])
 
 
 def _assemble_result(specs: Tuple[SweepSpec, ...],
                      resolved: Sequence[_Resolved], histories: np.ndarray,
-                     final_w: np.ndarray) -> SweepResult:
+                     final_w: np.ndarray,
+                     param_shapes: Tuple = ()) -> SweepResult:
     """Derive the accounting rows (passes, totals, epoch budgets) from the
     resolved specs and build the `SweepResult` — the ONE definition all
     dispatch paths (run_sweep, service demux, checkpointed jobs) share, so
@@ -560,32 +619,36 @@ def _assemble_result(specs: Tuple[SweepSpec, ...],
     return SweepResult(specs=specs, histories=histories,
                        effective_passes=passes, final_w=final_w,
                        total_updates=total_updates,
-                       epochs_per_row=epochs_per_row)
+                       epochs_per_row=epochs_per_row,
+                       param_shapes=param_shapes)
 
 
-def run_sweep(obj: LogisticRegression, epochs: int,
+def run_sweep(obj: Optional[Objective], epochs: int,
               specs: Sequence[SweepSpec], *, w0=None,
               drop_prob: float = 0.02,
               mesh: Optional[Mesh] = None) -> SweepResult:
     """Run every spec for its epoch budget in one compiled program per
-    (engine, M̃, option, buf_len) group, row-sharded across the mesh `data`
-    axis when one is active (explicit ``mesh=`` or the ambient
+    (objective, engine, M̃, option, buf_len) group, row-sharded across the
+    mesh `data` axis when one is active (explicit ``mesh=`` or the ambient
     `repro.sharding.context` mesh). Histories/final iterates are
     bit-identical to per-spec `run_asysvrg` / `run_hogwild` calls — sharded
     or not (XLA:CPU-calibrated; re-validate per backend).
 
+    ``obj`` is any `repro.core.objective.Objective` (or None when every
+    spec names a registered one); pytree objectives run on their FLAT
+    vector and `SweepResult.final_params` rebuilds the tree bit-exactly.
     Runners are fetched from the persistent cache in `repro.service.cache`:
     a repeated sweep with the same static group dims and data shapes
     compiles nothing."""
     plan = plan_sweep(obj, epochs, specs)
-    specs, resolved = plan.specs, plan.resolved
-    w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+    specs, resolved, obj = plan.specs, plan.resolved, plan.objective
+    w_init = obj.init_flat() if w0 is None else obj.as_flat(w0)
     mesh = _active_mesh(mesh)
 
     C = len(specs)
     max_epochs = max(r.epochs for r in resolved)
     histories = np.zeros((C, max_epochs + 1), np.float32)
-    final_w = np.zeros((C, obj.p), np.float32)
+    final_w = np.zeros((C, obj.flat_dim), np.float32)
 
     for key_, members in plan.groups.items():
         group_epochs = plan.group_epochs(key_)
@@ -595,4 +658,5 @@ def run_sweep(obj: LogisticRegression, epochs: int,
             _write_row_history(histories[c], hist[row], group_epochs)
             final_w[c] = w_fin[row]
 
-    return _assemble_result(specs, resolved, histories, final_w)
+    return _assemble_result(specs, resolved, histories, final_w,
+                            param_shapes=obj.param_shapes())

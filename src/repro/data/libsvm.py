@@ -12,6 +12,7 @@ original's CSR layout does not map (recorded in DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
@@ -60,7 +61,10 @@ def make_synthetic_libsvm(
     n = max(64, int(spec["n"] * scale))
     p = spec["p_reduced"]
     nnz_per_row = max(4, int(spec["density"] * spec["p"]))
-    rng = np.random.default_rng(seed + hash(name) % (2**31))
+    # crc32, NOT hash(): str hashing is salted per process (PYTHONHASHSEED),
+    # which silently made "the same" dataset differ across processes — fatal
+    # for pinned regressions and checkpoint-resume fingerprints.
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (2**31))
 
     X = np.zeros((n, p), dtype=np.float32)
     for i in range(n):

@@ -75,6 +75,7 @@ def result_to_dict(request_id: int, res: SweepResult) -> dict:
         "final_w": res.final_w.tolist(),
         "total_updates": res.total_updates.tolist(),
         "epochs_per_row": res.epochs_per_row.tolist(),
+        "param_shapes": [list(entry) for entry in res.param_shapes],
     }
 
 
@@ -85,7 +86,9 @@ def result_from_dict(payload: dict) -> SweepResult:
         effective_passes=np.asarray(payload["effective_passes"], np.float64),
         final_w=np.asarray(payload["final_w"], np.float32),
         total_updates=np.asarray(payload["total_updates"], np.int64),
-        epochs_per_row=np.asarray(payload["epochs_per_row"], np.int64))
+        epochs_per_row=np.asarray(payload["epochs_per_row"], np.int64),
+        param_shapes=tuple((path, tuple(shape), dtype) for path, shape, dtype
+                           in payload.get("param_shapes", ())))
 
 
 # ---------------------------------------------------------------- handler

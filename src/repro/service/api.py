@@ -34,12 +34,11 @@ import zlib
 from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
 from repro.checkpoint import Checkpointer
-from repro.core.objective import LogisticRegression
+from repro.core.objective import Objective
 from repro.core.sweep import (
     SweepResult,
     SweepSpec,
@@ -91,14 +90,19 @@ class SweepService:
     """Admit many clients' `SweepSpec` rows, run them as shared compiled
     groups, hand back per-request results.
 
-    One service instance is bound to one objective (`obj`), one default
-    epoch budget, one ``drop_prob``/``w0`` and one mesh policy — the things
-    `run_sweep` takes as call arguments. ``mesh=None`` re-resolves the
-    ambient `repro.sharding.context` mesh at every flush, so a service
-    created inside a launcher's `mesh_context` shards its dispatches.
+    One service instance is bound to one DEFAULT objective (`obj` — any
+    `repro.core.objective.Objective`, backing specs with ``objective="")``,
+    one default epoch budget, one ``drop_prob``/``w0`` and one mesh policy
+    — the things `run_sweep` takes as call arguments. ``obj`` may be None
+    when every submitted spec names a REGISTERED objective; one service
+    then sweeps many objectives, and the objective fingerprint in the
+    group key keeps their compiled dispatches apart. ``mesh=None``
+    re-resolves the ambient `repro.sharding.context` mesh at every flush,
+    so a service created inside a launcher's `mesh_context` shards its
+    dispatches.
     """
 
-    def __init__(self, obj: LogisticRegression, *, epochs: int = 10,
+    def __init__(self, obj: Optional[Objective], *, epochs: int = 10,
                  drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
                  w0=None, max_results: int = 1024,
                  width_policy: Optional[WidthPolicy] = None,
@@ -123,7 +127,6 @@ class SweepService:
         # request as unknown
         self._inflight: set = set()
         self._done_cv = threading.Condition(self._lock)
-        self._data_crc: Optional[int] = None     # memoized X/y digest
         self._pending: List[SweepRequest] = []
         # completed results are FIFO-bounded (like the LRU-bounded runner
         # cache one layer down): a long-lived server must not accumulate
@@ -434,18 +437,6 @@ class SweepService:
                 rows_padded=self._rows_padded)
 
     # ------------------------------------------------------ checkpointed job
-    def _dataset_crc(self) -> int:
-        """CRC of the objective's X/y bytes, computed once per service
-        (the objective is immutable for the service's lifetime)."""
-        with self._lock:
-            if self._data_crc is None:
-                crc = 0
-                for arr in (self.obj.X, self.obj.y):
-                    arr = np.ascontiguousarray(np.asarray(arr))
-                    crc = zlib.crc32(arr.tobytes(), crc)
-                self._data_crc = crc
-            return self._data_crc
-
     def run_job(self, specs: Sequence[SweepSpec],
                 epochs: Optional[int] = None, *,
                 checkpointer: Checkpointer,
@@ -466,29 +457,32 @@ class SweepService:
         """
         epochs = epochs if epochs is not None else self.default_epochs
         plan = plan_sweep(self.obj, epochs, specs)
+        job_obj = plan.objective
         group_items = list(plan.groups.items())
         resolved = plan.resolved
         C = len(plan.specs)
         max_epochs = max(r.epochs for r in resolved)
         epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
         # the fingerprint pins the RESOLVED plan AND the numeric inputs:
-        # specs + epochs + drop_prob + the actual X/y/w0/l2 bytes. Groups
-        # checkpointed from one starting point or dataset must never be
-        # blended with groups resumed under another (same-shape data or a
-        # different w0 would otherwise slip through). The X/y digest is
-        # memoized per service: a preemption loop calling run_job once per
-        # group hashes the dataset once, not once per call.
-        w0_arr = (np.zeros(self.obj.p, np.float32) if self.w0 is None
-                  else np.asarray(self.w0))
+        # specs + epochs + drop_prob + the objective fingerprint (its static
+        # config AND every data leaf's bytes — arbitrary pytree objectives
+        # included) + the actual w0 bytes. Groups checkpointed from one
+        # starting point or dataset must never be blended with groups
+        # resumed under another (same-shape data or a different w0 would
+        # otherwise slip through). The objective digest is memoized per
+        # instance: a preemption loop calling run_job once per group hashes
+        # the data once, not once per call.
+        w_init = (job_obj.init_flat() if self.w0 is None
+                  else job_obj.as_flat(self.w0))
         fp = zlib.crc32(repr((plan.specs, tuple(epochs_per_row.tolist()),
                               self.drop_prob,
-                              self._dataset_crc())).encode())
-        for arr in (w0_arr, np.float32(self.obj.l2)):
-            fp = zlib.crc32(np.ascontiguousarray(arr).tobytes(), fp)
+                              job_obj.fingerprint())).encode())
+        fp = zlib.crc32(
+            np.ascontiguousarray(np.asarray(w_init)).tobytes(), fp)
 
         state = {
             "histories": np.zeros((C, max_epochs + 1), np.float32),
-            "final_w": np.zeros((C, self.obj.p), np.float32),
+            "final_w": np.zeros((C, job_obj.flat_dim), np.float32),
             "done": np.zeros((len(group_items),), np.int8),
             "fingerprint": np.asarray(fp, np.int64),
         }
@@ -507,8 +501,6 @@ class SweepService:
                     "checkpoint directory holds a different job "
                     f"(fingerprint {int(state['fingerprint'])} != {fp})")
 
-        w_init = (jnp.zeros(self.obj.p) if self.w0 is None
-                  else jnp.asarray(self.w0))
         mesh = _active_mesh(self.mesh)
         dispatched = 0
         with _cache.scoped_counters(self._cache_sink):
@@ -518,7 +510,7 @@ class SweepService:
                 if max_groups is not None and dispatched >= max_groups:
                     return None, False
                 group_epochs = plan.group_epochs(key_)
-                hist, w_fin = _dispatch_group(self.obj, plan.specs,
+                hist, w_fin = _dispatch_group(job_obj, plan.specs,
                                               resolved, members, key_,
                                               group_epochs, w_init,
                                               self.drop_prob, mesh)
@@ -534,4 +526,5 @@ class SweepService:
                                   extra={"job_fingerprint": int(fp),
                                          "groups_total": len(group_items)})
         return _assemble_result(plan.specs, resolved, state["histories"],
-                                state["final_w"]), True
+                                state["final_w"],
+                                param_shapes=job_obj.param_shapes()), True

@@ -12,7 +12,7 @@ they are jitted: a module-level dict keyed on everything that determines
 the compiled program —
 
     (engine, M̃, option, buf_len, epochs-bound, drop_prob,
-     mesh fingerprint, X/y shape + dtype)
+     mesh fingerprint, objective static key, data shapes + dtypes)
 
 A repeated same-shape sweep — direct `run_sweep` or through the
 `repro.service.api.SweepService` — fetches the SAME jitted callable and
@@ -118,18 +118,23 @@ _COUNTERS = _Counters()
 _MAX_RUNNERS = 64
 
 _RunnerKey = Tuple  # (engine, M̃, option, buf_len, epochs, drop_prob,
-#                     mesh fingerprint, X shape, X dtype, y shape, y dtype)
+#                     mesh fingerprint, objective static key,
+#                     per-data-leaf (shape, dtype))
 
 
 def runner_key(engine: str, *, group_epochs: int, total: int, option: int,
                buf_len: int, drop_prob: float, mesh: Optional[Mesh],
-               X, y) -> _RunnerKey:
-    """Everything that determines the compiled program. Data enters the
-    runner as an argument, so only its SHAPE/DTYPE is keyed — two tenants
-    sweeping same-shape datasets share one compiled program."""
+               obj) -> _RunnerKey:
+    """Everything that determines the compiled program. The objective's data
+    enters the runner as arguments, so only its SHAPES/DTYPES are keyed
+    (plus `obj.runner_static_key()`, the static config its pure methods
+    close over) — two tenants sweeping same-shape datasets of one objective
+    class share one compiled program."""
+    data_sig = tuple((tuple(a.shape), str(jax.numpy.asarray(a).dtype))
+                     for a in obj.data_args())
     return (engine, int(total), int(option), int(buf_len), int(group_epochs),
             float(drop_prob), mesh_fingerprint(mesh),
-            tuple(X.shape), str(X.dtype), tuple(y.shape), str(y.dtype))
+            obj.runner_static_key(), data_sig)
 
 
 def _counted(fn):
@@ -146,18 +151,22 @@ def _counted(fn):
 
 def get_group_runner(engine: str, *, group_epochs: int, total: int,
                      option: int, buf_len: int, drop_prob: float,
-                     mesh: Optional[Mesh], X, y):
+                     mesh: Optional[Mesh], obj):
     """The jitted runner for one (engine, M̃, option, buf_len, …) group,
     built at most once per key.
 
-    The returned callable takes ``(X, y, l2, *row_args)`` with every row
-    array row-leading; under a mesh it is shard_mapped over the `data` axis
-    (data args replicated) before jitting — see
-    `repro.core.sweep._shard_group_fn` for the bit-exactness argument.
+    The returned callable takes ``(*obj.data_args(), *row_args)`` with
+    every row array row-leading; under a mesh it is shard_mapped over the
+    `data` axis (data args replicated) before jitting — see
+    `repro.core.sweep._shard_group_fn` for the bit-exactness argument. The
+    body closes over ``obj``'s pure methods, but the key carries only its
+    `runner_static_key()` — any same-key instance's data can run through a
+    runner another instance built.
     """
     key = runner_key(engine, group_epochs=group_epochs, total=total,
                      option=option, buf_len=buf_len, drop_prob=drop_prob,
-                     mesh=mesh, X=X, y=y)
+                     mesh=mesh, obj=obj)
+    num_data = len(obj.data_args())
     with _LOCK:
         runner = _RUNNERS.get(key)
         if runner is not None:
@@ -165,11 +174,12 @@ def get_group_runner(engine: str, *, group_epochs: int, total: int,
             _RUNNERS.move_to_end(key)            # LRU touch
             return runner
         _credit("misses")
-        fn, num_row = _sweep._group_fn(engine, epochs=group_epochs,
+        fn, num_row = _sweep._group_fn(engine, obj=obj, num_data=num_data,
+                                       epochs=group_epochs,
                                        total=total, buf_len=buf_len,
                                        option=option, drop_prob=drop_prob)
         if mesh is not None:
-            fn = _sweep._shard_group_fn(fn, mesh, num_row)
+            fn = _sweep._shard_group_fn(fn, mesh, num_data, num_row)
         runner = jax.jit(_counted(fn))
         _RUNNERS[key] = runner
         while len(_RUNNERS) > _MAX_RUNNERS:

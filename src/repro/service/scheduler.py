@@ -37,11 +37,10 @@ import dataclasses
 from typing import (Callable, Dict, List, NamedTuple, Optional, Sequence,
                     Tuple)
 
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.objective import LogisticRegression
+from repro.core.objective import Objective
 from repro.core.sweep import (
     SweepPlan,
     SweepResult,
@@ -104,12 +103,16 @@ class CoalescedBatch(NamedTuple):
 
     ``specs``/``resolved`` are the requests' normalized rows concatenated in
     admission order; ``groups`` pools flat row indices by the engine's
-    static group key, ACROSS requests.
+    static group key, ACROSS requests. The group key leads with the
+    objective fingerprint, so requests targeting DIFFERENT objectives
+    coalesce in one flush without ever sharing a compiled dispatch;
+    ``objectives`` maps each fingerprint to its resolved instance.
     """
     request_plans: Tuple[_RequestPlan, ...]
     specs: tuple
     resolved: tuple
     groups: Dict[tuple, List[int]]
+    objectives: Dict[int, Objective]
 
     def group_epochs(self, key: tuple) -> int:
         """A merged group's static scan bound: max over ALL pooled rows."""
@@ -126,19 +129,25 @@ class DispatchInfo(NamedTuple):
     #                          against a retrace — see WidthPolicy)
 
 
-def coalesce(obj: LogisticRegression,
+def coalesce(obj: Optional[Objective],
              requests: Sequence[SweepRequest]) -> CoalescedBatch:
-    """Plan every request independently, then pool rows by group key."""
+    """Plan every request independently, then pool rows by group key.
+
+    ``obj`` backs specs with ``objective=""``; requests whose specs name a
+    registered objective resolve through the registry exactly as a
+    standalone `run_sweep` would (and ``obj`` may then be None)."""
     if not requests:
         raise ValueError("nothing to coalesce: no pending requests")
     request_plans: List[_RequestPlan] = []
     specs: list = []
     resolved: list = []
     groups: Dict[tuple, List[int]] = {}
+    objectives: Dict[int, Objective] = {}
     offset = 0
     for req in requests:
         plan = plan_sweep(obj, req.epochs, req.specs)
         request_plans.append(_RequestPlan(req, plan, offset))
+        objectives[plan.objective.fingerprint()] = plan.objective
         for key, members in plan.groups.items():
             groups.setdefault(key, []).extend(offset + c for c in members)
         specs.extend(plan.specs)
@@ -146,10 +155,10 @@ def coalesce(obj: LogisticRegression,
         offset += len(plan.specs)
     return CoalescedBatch(request_plans=tuple(request_plans),
                           specs=tuple(specs), resolved=tuple(resolved),
-                          groups=groups)
+                          groups=groups, objectives=objectives)
 
 
-def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
+def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
              drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
              width_policy: Optional[WidthPolicy] = None,
              ) -> Tuple[Dict[int, SweepResult], DispatchInfo]:
@@ -160,18 +169,25 @@ def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
     the same ``w0``/``drop_prob``/``mesh`` — with or without a
     ``width_policy`` (pad rows repeat member 0 and are dropped before
     demux, so they can only cost compute, never change bits).
+
+    Each group dispatches with ITS objective (``batch.objectives``); ``w0``
+    (flat or pytree) must fit every dispatched objective — leave it None
+    for a mixed-objective flush (each starts from its own `init_flat`).
     """
     specs, resolved = batch.specs, batch.resolved
-    w_init = jnp.zeros(obj.p) if w0 is None else jnp.asarray(w0)
+    w_inits = {ofp: (o.init_flat() if w0 is None else o.as_flat(w0))
+               for ofp, o in batch.objectives.items()}
 
     # per-request output buffers at the REQUEST's own history width (its
-    # rows' max epoch budget), exactly like a standalone run_sweep
+    # rows' max epoch budget) and ITS objective's flat dim, exactly like a
+    # standalone run_sweep
     buffers = []
     for rp in batch.request_plans:
         e_rows = np.asarray([r.epochs for r in rp.plan.resolved], np.int64)
         width = int(e_rows.max()) + 1
         buffers.append((np.zeros((len(rp.plan.specs), width), np.float32),
-                        np.zeros((len(rp.plan.specs), obj.p), np.float32),
+                        np.zeros((len(rp.plan.specs),
+                                  rp.plan.objective.flat_dim), np.float32),
                         e_rows))
     offsets = [rp.offset for rp in batch.request_plans]
 
@@ -189,9 +205,10 @@ def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
                     f"{len(members)} real rows")
             run_members = members + [members[0]] * (width - len(members))
             rows_padded += width - len(members)
-        hist, w_fin = _dispatch_group(obj, specs, resolved, run_members,
-                                      key_, group_epochs, w_init, drop_prob,
-                                      mesh)
+        group_obj = batch.objectives[key_[0]]
+        hist, w_fin = _dispatch_group(group_obj, specs, resolved,
+                                      run_members, key_, group_epochs,
+                                      w_inits[key_[0]], drop_prob, mesh)
         hist, w_fin = hist[:len(members)], w_fin[:len(members)]
         owners = {bisect.bisect_right(offsets, c) - 1 for c in members}
         if len(owners) > 1:
@@ -209,7 +226,8 @@ def dispatch(obj: LogisticRegression, batch: CoalescedBatch, *, w0=None,
     results: Dict[int, SweepResult] = {}
     for rp, (hists, finals, _) in zip(batch.request_plans, buffers):
         results[rp.request.request_id] = _assemble_result(
-            rp.plan.specs, rp.plan.resolved, hists, finals)
+            rp.plan.specs, rp.plan.resolved, hists, finals,
+            param_shapes=rp.plan.objective.param_shapes())
 
     info = DispatchInfo(groups_dispatched=len(batch.groups),
                         rows_dispatched=len(specs),

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def tree_zeros_like(tree):
@@ -69,3 +70,66 @@ def tree_bytes(tree) -> int:
 
 def tree_cast(tree, dtype):
     return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact flatten / unflatten (the sweep engine's pytree<->flat bridge)
+#
+# The AsySVRG/Hogwild! epoch cores do their delay-buffer and update math on
+# ONE flat vector per config row (that is what keeps the ring-buffer reads,
+# the unlock coordinate masks and the fused `kernels/svrg_update` routing
+# objective-agnostic). Pytree objectives cross that boundary through the
+# helpers below, which are pure data movement — concatenate of raveled
+# leaves one way, split+reshape the other — so the round-trip is BIT-EXACT
+# by construction (tests/test_properties.py pins it for arbitrary nested
+# trees). Leaves must share one dtype: a mixed-dtype tree would force a cast
+# (jnp.concatenate promotes), which silently breaks bit-exactness, so we
+# raise instead.
+# ---------------------------------------------------------------------------
+
+def _leaf_meta(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot ravel an empty pytree")
+    dtypes = {jnp.dtype(x.dtype) for x in leaves}
+    if len(dtypes) > 1:
+        raise ValueError(
+            f"tree_ravel requires one leaf dtype, got {sorted(map(str, dtypes))}"
+            " — cast the tree first (mixed dtypes would not round-trip "
+            "bit-exactly through concatenate)")
+    shapes = [tuple(x.shape) for x in leaves]
+    return leaves, treedef, shapes
+
+
+def tree_ravel(tree):
+    """Flatten a pytree of same-dtype arrays to one 1-D vector.
+
+    A single 1-D leaf passes through UNTOUCHED (no reshape/concat node in
+    the graph) — the flat-vector objectives (logistic regression and
+    friends) therefore compile to exactly the graphs they had before the
+    pytree generalization.
+    """
+    leaves, _, _ = _leaf_meta(tree)
+    if len(leaves) == 1 and getattr(leaves[0], "ndim", None) == 1:
+        return leaves[0]
+    return jnp.concatenate([jnp.ravel(x) for x in leaves])
+
+
+def tree_unravel_fn(template):
+    """``unravel(flat) -> tree`` for trees shaped like ``template``.
+
+    Built once per objective from its param template (shapes/treedef are
+    static), so the returned closure is jit-stable. Inverse of `tree_ravel`
+    bit-exactly."""
+    leaves, treedef, shapes = _leaf_meta(template)
+    if len(leaves) == 1 and len(shapes[0]) == 1:
+        return lambda flat: jax.tree.unflatten(treedef, [flat])
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    bounds = list(np.cumsum(sizes)[:-1])
+
+    def unravel(flat):
+        parts = jnp.split(flat, bounds)
+        return jax.tree.unflatten(
+            treedef, [p.reshape(s) for p, s in zip(parts, shapes)])
+
+    return unravel

@@ -93,16 +93,19 @@ def test_service_second_sweep_compiles_nothing(obj):
 
 
 def test_cache_keys_separate_static_dims(obj):
-    """Different epochs-bound / drop_prob / data shape key different
+    """Different epochs-bound / drop_prob / objective key different
     runners; identical dims (even via a different Mesh-less path) share."""
     k = dict(group_epochs=2, total=100, option=2, buf_len=4,
-             drop_prob=0.02, mesh=None, X=obj.X, y=obj.y)
+             drop_prob=0.02, mesh=None, obj=obj)
     base = runner_key("asysvrg", **k)
     assert runner_key("asysvrg", **k) == base
     assert runner_key("hogwild", **k) != base
     assert runner_key("asysvrg", **{**k, "group_epochs": 3}) != base
     assert runner_key("asysvrg", **{**k, "drop_prob": 0.0}) != base
     assert runner_key("asysvrg", **{**k, "buf_len": 8}) != base
+    # same static key, same data shapes, DIFFERENT instance: shares a runner
+    obj2 = LogisticRegression(obj.X, obj.y, l2_reg=obj.l2)
+    assert runner_key("asysvrg", **{**k, "obj": obj2}) == base
 
 
 def test_clear_cache_resets(obj):

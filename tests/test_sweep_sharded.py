@@ -205,6 +205,74 @@ def test_http_server_sharded_bit_identical(obj, mesh):
             _assert_same(got, run_sweep(obj, 2, specs))
 
 
+@pytest.mark.nonconvex
+def test_pytree_objectives_sharded_bit_identical(mesh):
+    """The pluggable-objective workloads (MLP LM pytree params; nonconvex
+    clipped-penalty logistic) under the forced 8-device mesh: sharded ==
+    unsharded per row, and `final_params` rebuilds the same pytree."""
+    from repro.core import NonconvexLogistic, mlp_lm_objective
+
+    mlp = mlp_lm_objective(n=16, vocab_size=16, seq_len=4, d_model=8,
+                           d_hidden=8)
+    ds = make_synthetic_libsvm("real-sim", seed=11, scale=0.002)
+    ncv = NonconvexLogistic(ds.X, ds.y, lam=1e-3, alpha=10.0)
+    for workload in (mlp, ncv):
+        specs = [SweepSpec(scheme=SCHEMES[c % 3], step_size=0.1, tau=2,
+                           num_threads=3, inner_steps=10, seed=c)
+                 for c in range(3)]
+        specs.append(SweepSpec(algo="hogwild", scheme="consistent",
+                               step_size=0.1, tau=2, num_threads=3, seed=9))
+        base = run_sweep(workload, 2, specs)
+        shard = run_sweep(workload, 2, specs, mesh=mesh)
+        _assert_same(base, shard)
+        np.testing.assert_array_equal(
+            np.asarray(workload.as_flat(shard.final_params(0))),
+            shard.final_w[0])
+
+
+@pytest.mark.nonconvex
+def test_pytree_objectives_http_sharded_bit_identical(mesh):
+    """Acceptance: both new workloads end-to-end through SweepService + the
+    HTTP server OVER a forced 8-device mesh — results bit-identical to
+    in-process sharded and unsharded `run_sweep`, wire round-trip included
+    (the nonconvex workload addressed by registry name, service obj=None)."""
+    from repro.core import NonconvexLogistic, mlp_lm_objective
+    from repro.core.objective import (register_objective,
+                                      unregister_objective)
+    from repro.server import FlushPolicy, SweepClient, SweepServer
+    from repro.service import SweepService
+
+    mlp = mlp_lm_objective(n=16, vocab_size=16, seq_len=4, d_model=8,
+                           d_hidden=8)
+    ds = make_synthetic_libsvm("real-sim", seed=11, scale=0.002)
+    ncv = NonconvexLogistic(ds.X, ds.y, lam=1e-3, alpha=10.0)
+    register_objective("sharded-test-ncv", ncv)
+    try:
+        mlp_specs = [SweepSpec(scheme="inconsistent", step_size=0.1, tau=2,
+                               num_threads=3, inner_steps=10, seed=0),
+                     SweepSpec(algo="hogwild", scheme="consistent",
+                               step_size=0.1, tau=2, num_threads=3, seed=1)]
+        ncv_specs = [SweepSpec(scheme="unlock", step_size=0.2, tau=2,
+                               num_threads=3, inner_steps=10, seed=0,
+                               objective="sharded-test-ncv")]
+        svc = SweepService(mlp, epochs=2, mesh=mesh)
+        with SweepServer(svc, policy=FlushPolicy(max_rows=64,
+                                                 max_delay_ms=25)) as server:
+            client = SweepClient(server.url, poll_s=5.0)
+            rid_mlp = client.submit(mlp_specs, tenant="mlp")
+            rid_ncv = client.submit(ncv_specs, tenant="ncv")
+            got_mlp = client.result(rid_mlp, timeout=240)
+            got_ncv = client.result(rid_ncv, timeout=240)
+        _assert_same(got_mlp, run_sweep(mlp, 2, mlp_specs, mesh=mesh))
+        _assert_same(got_mlp, run_sweep(mlp, 2, mlp_specs))
+        _assert_same(got_ncv, run_sweep(None, 2, ncv_specs, mesh=mesh))
+        _assert_same(got_ncv, run_sweep(None, 2, ncv_specs))
+        assert set(got_mlp.final_params(0)) == {"embed", "norm", "w1",
+                                                "b1", "w2"}
+    finally:
+        unregister_objective("sharded-test-ncv")
+
+
 def test_model_axis_mesh_degrades_to_unsharded(obj):
     """A mesh without a >1 `data` axis (e.g. the 1×1 host mesh) falls back
     to the single-device path rather than erroring."""
