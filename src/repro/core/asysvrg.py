@@ -208,6 +208,48 @@ def _epoch_core(obj: Objective, data, w, key, eta, tau, scheme_id, delay_id,
     return u_last if option == 1 else acc / total
 
 
+def _asysvrg_epochs_core(obj: Objective, data, w0, key, eta, tau, scheme_id,
+                         delay_id, *, epochs: int, total: int, buf_len: int,
+                         option: int, drop_prob: float, row_epochs=None):
+    """``epochs`` outer AsySVRG iterations as one `lax.scan`, with the
+    fixed-order loss recorded after every epoch (index 0 = loss at w0).
+
+    The multi-epoch mirror of `_hogwild_epochs_core`: ``row_epochs`` (a
+    dynamic, batchable scalar; default = the static ``epochs`` bound) is
+    this config's own budget — past it the row FREEZES (carry passthrough +
+    masked loss writes re-emitting the last live loss), so a sweep row with
+    a shorter budget is bit-identical to an independent shorter run.
+
+    This is the ONE definition of the per-row epochs scan: the sweep
+    engine's vmap path batches it (`repro.core.sweep._asysvrg_group_fn`)
+    and the fused Pallas megakernel runs it per grid row
+    (`repro.kernels.sweep_epoch`) — both paths execute literally this
+    function, which is what makes them bit-identical on XLA:CPU.
+    """
+    loss0 = obj.flat_loss(data, w0)
+    bound = jnp.int32(epochs) if row_epochs is None else row_epochs
+
+    def step(carry, e):
+        w, key, loss_prev = carry
+        key, sub = jax.random.split(key)
+        active = e < bound
+        w_new = _epoch_core(
+            obj, data, w, sub, eta, tau, scheme_id, delay_id,
+            total=total, buf_len=buf_len, option=option,
+            drop_prob=drop_prob)
+        # frozen rows: carry passthrough + masked loss write (the last
+        # live loss is re-emitted), so a row with a shorter budget is
+        # bit-identical to an independent shorter run
+        w_next = jnp.where(active, w_new, w)
+        loss_next = jnp.where(active, obj.flat_loss(data, w_next),
+                              loss_prev)
+        return (w_next, key, loss_next), loss_next
+
+    (w_fin, _, _), losses = jax.lax.scan(
+        step, (w0, key, loss0), jnp.arange(epochs))
+    return w_fin, jnp.concatenate([loss0[None], losses])
+
+
 def _resolve_steps(obj: Objective, cfg: SVRGConfig):
     """(p, M, M̃=pM, clamped τ) from the config — paper §5.1 defaults."""
     p_threads = max(1, cfg.num_threads)

@@ -92,11 +92,13 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+import os
+
 from repro.config import SVRGConfig
 from repro.core.asysvrg import (
     DELAY_IDS,
     SCHEME_IDS,
-    _epoch_core,
+    _asysvrg_epochs_core,
     _resolve_steps,
 )
 from repro.core.hogwild import _hogwild_epochs_core, _resolve_hogwild_steps
@@ -108,6 +110,27 @@ ALGOS = ("asysvrg", "hogwild", "svrg")
 _ENGINE_ASYSVRG = "asysvrg"
 _ENGINE_HOGWILD = "hogwild"
 _DATA_AXIS = "data"
+
+# engine modes: how a group's epoch scan executes. "vmap" batches the
+# per-row epochs cores with jax.vmap (per-update XLA op dispatch); "fused"
+# maps the row axis onto a Pallas grid and runs the whole (group × epoch)
+# scan as ONE megakernel launch (repro.kernels.sweep_epoch) — compiled on
+# TPU, Pallas-interpreter elsewhere, where it is BIT-IDENTICAL to the vmap
+# path (tests/test_kernel_sweep.py). "" on a spec inherits the process
+# default: $REPRO_SWEEP_ENGINE, else "vmap".
+ENGINE_MODES = ("vmap", "fused")
+_ENGINE_MODE_ENV = "REPRO_SWEEP_ENGINE"
+
+
+def default_engine_mode() -> str:
+    """The process-wide engine mode specs with ``engine_mode=""`` resolve
+    to: ``$REPRO_SWEEP_ENGINE`` when set (validated), else "vmap" — the
+    fused megakernel is opt-in per spec or per process."""
+    mode = os.environ.get(_ENGINE_MODE_ENV, "").strip().lower()
+    if mode and mode not in ENGINE_MODES:
+        raise ValueError(
+            f"{_ENGINE_MODE_ENV}={mode!r} — expected one of {ENGINE_MODES}")
+    return mode or "vmap"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +156,12 @@ class SweepSpec:
     rectangular in its flat dim); submit separate requests to sweep several
     objectives — the service scheduler keeps them in distinct groups via
     the objective fingerprint in the group key.
+    ``engine_mode`` picks how the row's group executes: "vmap" (the
+    batched-XLA path) or "fused" (the Pallas sweep-epoch megakernel,
+    `repro.kernels.sweep_epoch`); "" inherits `default_engine_mode()`.
+    The mode joins the group key, so fused and vmap rows never share a
+    compiled runner — and their results are bit-identical in interpret
+    mode, so flipping the flag never changes a row's numbers on CPU.
     """
     seed: int = 0
     scheme: str = "inconsistent"
@@ -146,6 +175,7 @@ class SweepSpec:
     decay: float = 0.9
     epochs: int = 0
     objective: str = ""
+    engine_mode: str = ""
 
     def to_config(self) -> SVRGConfig:
         return SVRGConfig(scheme=self.scheme, step_size=self.step_size,
@@ -238,6 +268,7 @@ class _Resolved(NamedTuple):
     passes_per_epoch: float
     buf_len: int         # ring-buffer length, pinned per-row (see _resolve)
     epochs: int          # this row's outer-epoch budget
+    fused: bool = False  # True = Pallas megakernel, False = vmap path
 
 
 def _row_buf_len(tau: int, num_threads: int, total: int) -> int:
@@ -269,6 +300,10 @@ def _normalize_spec(spec: SweepSpec) -> SweepSpec:
         raise ValueError(f"unknown delay schedule {spec.delay_kind!r}")
     if spec.epochs < 0:
         raise ValueError(f"epochs must be >= 0 (0 = inherit), got {spec.epochs}")
+    if spec.engine_mode and spec.engine_mode not in ENGINE_MODES:
+        raise ValueError(
+            f"unknown engine_mode {spec.engine_mode!r} "
+            f"(expected one of {ENGINE_MODES}, or '' to inherit)")
     if spec.algo == "svrg":
         if spec.tau != 0:
             raise ValueError(
@@ -290,6 +325,7 @@ def _resolve(obj: Objective, spec: SweepSpec,
     epochs = spec.epochs or default_epochs
     if epochs < 1:
         raise ValueError(f"resolved epochs must be >= 1, got {epochs}")
+    fused = (spec.engine_mode or default_engine_mode()) == "fused"
 
     if spec.algo == "hogwild":
         _, total, tau = _resolve_hogwild_steps(obj.n, spec.num_threads,
@@ -297,20 +333,23 @@ def _resolve(obj: Objective, spec: SweepSpec,
         delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
         res = _Resolved(_ENGINE_HOGWILD, total, tau,
                         SCHEME_IDS[spec.scheme], delay_id, 0, 1.0,
-                        _row_buf_len(tau, spec.num_threads, total), epochs)
+                        _row_buf_len(tau, spec.num_threads, total), epochs,
+                        fused)
     elif spec.algo == "svrg":
         # the zero-delay degenerate case on the asysvrg engine (paper §3)
         total = spec.inner_steps or 2 * obj.n
         res = _Resolved(_ENGINE_ASYSVRG, total, 0,
                         SCHEME_IDS["consistent"], DELAY_IDS["zero"],
                         spec.option, 1.0 + total / obj.n,
-                        _row_buf_len(0, spec.num_threads, total), epochs)
+                        _row_buf_len(0, spec.num_threads, total), epochs,
+                        fused)
     else:
         _, _, total, tau = _resolve_steps(obj, spec.to_config())
         delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[spec.delay_kind]
         res = _Resolved(_ENGINE_ASYSVRG, total, tau, SCHEME_IDS[spec.scheme],
                         delay_id, spec.option, 1.0 + total / obj.n,
-                        _row_buf_len(tau, spec.num_threads, total), epochs)
+                        _row_buf_len(tau, spec.num_threads, total), epochs,
+                        fused)
     if res.total < 1:
         raise ValueError(
             f"resolved inner-step count M̃ must be >= 1, got {res.total} "
@@ -324,14 +363,17 @@ def _executed_spec(spec: SweepSpec, r: _Resolved) -> SweepSpec:
     explicit, zero-delay collapse reflected, per-row epochs pinned)."""
     delay = "zero" if r.delay_id == DELAY_IDS["zero"] else spec.delay_kind
     return dataclasses.replace(spec, tau=r.tau, delay_kind=delay,
-                               epochs=r.epochs)
+                               epochs=r.epochs,
+                               engine_mode="fused" if r.fused else "vmap")
 
 
-# (objective fingerprint, engine, M̃, option, buf_len) — the fingerprint
-# covers the objective's static config AND data bytes, so the service
-# scheduler can pool rows from different requests without ever coalescing
-# two objectives (or two datasets) into one compiled dispatch.
-_GroupKey = Tuple[int, str, int, int, int]
+# (objective fingerprint, engine, M̃, option, buf_len, fused) — the
+# fingerprint covers the objective's static config AND data bytes, so the
+# service scheduler can pool rows from different requests without ever
+# coalescing two objectives (or two datasets) into one compiled dispatch.
+# ``fused`` (the resolved engine mode) sits LAST so key_[0] stays the
+# objective fingerprint everywhere the scheduler peeks at it.
+_GroupKey = Tuple[int, str, int, int, int, bool]
 
 
 class SweepPlan(NamedTuple):
@@ -373,9 +415,10 @@ def plan_sweep(obj: Optional[Objective], epochs: int,
     """Normalize + resolve specs and group them by compiled-program shape.
 
     Exposed for tests and capacity planning: the group keys are the static
-    dims (objective fingerprint, engine, M̃, option, buf_len), all pinned
-    per-row, so a row's key never depends on which other rows share the
-    sweep. ``obj`` may be None when every spec names a registered objective.
+    dims (objective fingerprint, engine, M̃, option, buf_len, fused), all
+    pinned per-row, so a row's key never depends on which other rows share
+    the sweep. ``obj`` may be None when every spec names a registered
+    objective.
     """
     specs = tuple(_normalize_spec(s) for s in specs)
     if not specs:
@@ -386,8 +429,9 @@ def plan_sweep(obj: Optional[Objective], epochs: int,
     specs = tuple(_executed_spec(s, r) for s, r in zip(specs, resolved))
     groups: Dict[_GroupKey, List[int]] = {}
     for c, r in enumerate(resolved):
-        groups.setdefault((ofp, r.engine, r.total, r.option, r.buf_len),
-                          []).append(c)
+        groups.setdefault(
+            (ofp, r.engine, r.total, r.option, r.buf_len, r.fused),
+            []).append(c)
     return SweepPlan(specs=specs, resolved=resolved, groups=groups,
                      objective=obj)
 
@@ -439,27 +483,10 @@ def _asysvrg_group_fn(obj: Objective, num_data: int, epochs: int, total: int,
             all_args[num_data:]
 
         def per_config(key, eta, tau, scheme_id, delay_id, row_epochs, w0):
-            loss0 = obj.flat_loss(data, w0)
-
-            def step(carry, e):
-                w, key, loss_prev = carry
-                key, sub = jax.random.split(key)
-                active = e < row_epochs
-                w_new = _epoch_core(
-                    obj, data, w, sub, eta, tau, scheme_id, delay_id,
-                    total=total, buf_len=buf_len, option=option,
-                    drop_prob=drop_prob)
-                # frozen rows: carry passthrough + masked loss write (the
-                # last live loss is re-emitted), so a row with a shorter
-                # budget is bit-identical to an independent shorter run
-                w_next = jnp.where(active, w_new, w)
-                loss_next = jnp.where(active, obj.flat_loss(data, w_next),
-                                      loss_prev)
-                return (w_next, key, loss_next), loss_next
-
-            (w_fin, _, _), losses = jax.lax.scan(
-                step, (w0, key, loss0), jnp.arange(epochs))
-            return w_fin, jnp.concatenate([loss0[None], losses])
+            return _asysvrg_epochs_core(
+                obj, data, w0, key, eta, tau, scheme_id, delay_id,
+                epochs=epochs, total=total, buf_len=buf_len, option=option,
+                drop_prob=drop_prob, row_epochs=row_epochs)
 
         return jax.vmap(per_config)(keys, etas, taus, scheme_ids, delay_ids,
                                     row_epochs, w0_rows)
@@ -492,8 +519,23 @@ def _hogwild_group_fn(obj: Objective, num_data: int, epochs: int, total: int,
 
 
 def _group_fn(engine: str, *, obj: Objective, num_data: int, epochs: int,
-              total: int, buf_len: int, option: int, drop_prob: float):
-    """(unjitted group body, row-arg count) for the runner cache."""
+              total: int, buf_len: int, option: int, drop_prob: float,
+              fused: bool = False):
+    """(unjitted group body, row-arg count) for the runner cache.
+
+    ``fused=True`` swaps the vmap batching for the Pallas sweep-epoch
+    megakernel (repro.kernels.sweep_epoch) — same calling convention, same
+    per-row epochs-scan functions, so in interpret mode the two bodies are
+    bit-identical.
+    """
+    if fused:
+        from repro.kernels.dispatch import fused_sweep_mode
+        from repro.kernels.sweep_epoch import fused_group_fn
+        return (fused_group_fn(obj, num_data, engine=engine, epochs=epochs,
+                               total=total, buf_len=buf_len, option=option,
+                               drop_prob=drop_prob,
+                               interpret=fused_sweep_mode() == "interpret"),
+                _NUM_ROW_ARGS[engine])
     if engine == _ENGINE_HOGWILD:
         return (_hogwild_group_fn(obj, num_data, epochs, total, buf_len,
                                   drop_prob),
@@ -570,7 +612,7 @@ def _dispatch_group(obj: Objective, specs: Sequence[SweepSpec],
     """
     from repro.service.cache import get_group_runner
 
-    _, engine, total, option, buf_len = key_
+    _, engine, total, option, buf_len, fused = key_
     keys = jax.vmap(jax.random.PRNGKey)(
         jnp.asarray([specs[c].seed for c in members]))
     etas = jnp.asarray([specs[c].step_size for c in members], jnp.float32)
@@ -593,7 +635,8 @@ def _dispatch_group(obj: Objective, specs: Sequence[SweepSpec],
 
     runner = get_group_runner(engine, group_epochs=group_epochs, total=total,
                               option=option, buf_len=buf_len,
-                              drop_prob=drop_prob, mesh=mesh, obj=obj)
+                              drop_prob=drop_prob, mesh=mesh, obj=obj,
+                              fused=fused)
     if mesh is not None:
         # pad the row axis to a multiple of the data-axis size; padded rows
         # replicate row 0 and are sliced off below

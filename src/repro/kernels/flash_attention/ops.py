@@ -1,20 +1,17 @@
 """Public flash-attention wrapper: GQA expansion + layout + dispatch.
 
 Accepts the model-layer layout q [B,S,N,h], k/v [B,S,K,h] and handles
-GQA by repeating kv heads (the kernel sees MHA). Falls back to the jnp
-reference off-TPU; interpret mode is used by the test sweep.
+GQA by repeating kv heads (the kernel sees MHA). Mode selection (compiled /
+interpret / jnp reference) goes through
+`repro.kernels.dispatch.kernel_mode` — the one policy all kernels share.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import kernel_mode
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-
-
-def _use_kernel() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def gqa_flash(q, k, v, *, causal: bool = True, window: int = 0,
@@ -27,11 +24,12 @@ def gqa_flash(q, k, v, *, causal: bool = True, window: int = 0,
     qt = q.transpose(0, 2, 1, 3)                      # [B,N,S,h]
     kt = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1)
     vt = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1)
-    if force_kernel or _use_kernel():
+    mode = kernel_mode(interpret, force_kernel)
+    if mode != "reference":
         out = flash_attention(
             qt.reshape(B * N, S, h), kt.reshape(B * N, S, h),
             vt.reshape(B * N, S, h), causal=causal, window=window,
-            bq=bq, bk=bk, interpret=interpret)
+            bq=bq, bk=bk, interpret=mode == "interpret")
         out = out.reshape(B, N, S, h)
     else:
         out = attention_ref(qt, kt, vt, causal=causal, window=window)

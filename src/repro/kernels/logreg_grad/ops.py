@@ -1,22 +1,24 @@
-"""Public fused logreg-gradient op: padding + dispatch + λw term."""
+"""Public fused logreg-gradient op: padding + dispatch + λw term.
+
+Mode selection (compiled / interpret / jnp reference) goes through
+`repro.kernels.dispatch.kernel_mode` — the one policy all kernels share.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import kernel_mode
 from repro.kernels.logreg_grad.kernel import (
     BLOCK_B, BLOCK_P, grad_accum, margins)
 from repro.kernels.logreg_grad.ref import logreg_grad_ref
 
 
-def _use_kernel() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def logreg_grad(X, y, w, l2: float, interpret: bool = False,
                 force_kernel: bool = False):
-    if not (force_kernel or _use_kernel()):
+    mode = kernel_mode(interpret, force_kernel)
+    if mode == "reference":
         return logreg_grad_ref(X, y, w, l2)
+    interpret = mode == "interpret"
     B, P = X.shape
     padB = (-B) % BLOCK_B
     padP = (-P) % BLOCK_P

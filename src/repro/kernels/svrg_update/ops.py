@@ -1,28 +1,27 @@
 """Public wrapper for the fused SVRG update: pytree + padding handling.
 
 `apply_tree` flattens every leaf to (rows, 128) tiles (zero-padded), runs the
-kernel per leaf, and restores shapes. On non-TPU backends it falls back to
-the jnp reference (the kernel path is exercised in interpret mode by the
-test sweep).
+kernel per leaf, and restores shapes. Mode selection (compiled / interpret /
+jnp reference) goes through `repro.kernels.dispatch.kernel_mode` — the one
+policy all kernels share.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import kernel_mode
 from repro.kernels.svrg_update.kernel import (
     BLOCK_ROWS, LANES, svrg_update_2d)
 from repro.kernels.svrg_update.ref import svrg_update_ref
 
 
-def _use_kernel() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def apply_leaf(u, g, g0, gf, lr, wd: float = 0.0, interpret: bool = False,
                force_kernel: bool = False):
-    if not (force_kernel or _use_kernel()):
+    mode = kernel_mode(interpret, force_kernel)
+    if mode == "reference":
         return svrg_update_ref(u, g, g0, gf, lr, wd)
+    interpret = mode == "interpret"
     n = u.size
     tile = BLOCK_ROWS * LANES
     rows = -(-n // tile) * BLOCK_ROWS

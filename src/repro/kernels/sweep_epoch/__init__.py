@@ -1,0 +1,5 @@
+"""Fused Pallas sweep-epoch megakernel: one launch per (group × run)."""
+from repro.kernels.sweep_epoch.kernel import sweep_epoch_call
+from repro.kernels.sweep_epoch.ops import fused_group_fn
+
+__all__ = ["sweep_epoch_call", "fused_group_fn"]

@@ -1,0 +1,55 @@
+"""Public fused sweep-epoch op: engine row functions + group-fn builder.
+
+`fused_group_fn` returns a function with EXACTLY the calling convention of
+the vmap group bodies in `repro.core.sweep` (``group(*data_args,
+*row_args) -> (w_fin [C, d], hist [C, epochs+1])``), so the engine's
+dispatch, the service runner cache and the `shard_map` wrapper all treat
+the megakernel as a drop-in engine: `run_sweep` selects it per group via
+``SweepSpec.engine_mode`` and nothing above `core.sweep` changes.
+
+Mode selection goes through `repro.kernels.dispatch.fused_sweep_mode` —
+interpret everywhere except TPU (compiled Mosaic lowering is unvalidated
+off-TPU; the interpret path is bit-exact to the vmap engine, which is this
+kernel's reference oracle).
+"""
+from __future__ import annotations
+
+from repro.core.asysvrg import _asysvrg_epochs_core
+from repro.core.hogwild import _hogwild_epochs_core
+from repro.kernels.sweep_epoch.kernel import sweep_epoch_call
+
+
+def fused_group_fn(obj, num_data: int, *, engine: str, epochs: int,
+                   total: int, buf_len: int, option: int, drop_prob: float,
+                   interpret: bool):
+    """The megakernel group body for one (engine, M̃, option, buf_len) group.
+
+    Closes over the objective's PURE methods + static config only (the
+    data tuple and every per-row array are runtime arguments), mirroring
+    `repro.core.sweep._asysvrg_group_fn` — so the returned function lives
+    in the persistent runner cache under the same rules, keyed with the
+    fused flag and resolved kernel mode.
+    """
+    if engine == "hogwild":
+        def row_fn(data, key, gamma, decay, tau, scheme_id, delay_id,
+                   row_epochs, w0):
+            return _hogwild_epochs_core(
+                obj, data, w0, key, gamma, decay, tau, scheme_id, delay_id,
+                epochs=epochs, total=total, buf_len=buf_len,
+                drop_prob=drop_prob, row_epochs=row_epochs)
+    else:
+        def row_fn(data, key, eta, tau, scheme_id, delay_id, row_epochs, w0):
+            return _asysvrg_epochs_core(
+                obj, data, w0, key, eta, tau, scheme_id, delay_id,
+                epochs=epochs, total=total, buf_len=buf_len, option=option,
+                drop_prob=drop_prob, row_epochs=row_epochs)
+
+    dim = obj.flat_dim
+
+    def group(*all_args):
+        data = all_args[:num_data]
+        row_args = all_args[num_data:]
+        return sweep_epoch_call(row_fn, data, row_args, epochs=epochs,
+                                dim=dim, interpret=interpret)
+
+    return group

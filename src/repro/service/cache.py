@@ -119,12 +119,23 @@ _MAX_RUNNERS = 64
 
 _RunnerKey = Tuple  # (engine, M̃, option, buf_len, epochs, drop_prob,
 #                     mesh fingerprint, objective static key,
-#                     per-data-leaf (shape, dtype))
+#                     per-data-leaf (shape, dtype), fused kernel mode)
+
+
+def _fused_mode_key(fused: bool) -> Optional[str]:
+    """The cache-key facet for the engine body: None for the vmap path,
+    else the RESOLVED megakernel mode ('interpret' | 'compiled'). Resolving
+    at key time means flipping ``REPRO_KERNEL_MODE`` mid-process can never
+    serve a runner built for the other lowering."""
+    if not fused:
+        return None
+    from repro.kernels.dispatch import fused_sweep_mode
+    return fused_sweep_mode()
 
 
 def runner_key(engine: str, *, group_epochs: int, total: int, option: int,
                buf_len: int, drop_prob: float, mesh: Optional[Mesh],
-               obj) -> _RunnerKey:
+               obj, fused: bool = False) -> _RunnerKey:
     """Everything that determines the compiled program. The objective's data
     enters the runner as arguments, so only its SHAPES/DTYPES are keyed
     (plus `obj.runner_static_key()`, the static config its pure methods
@@ -134,7 +145,7 @@ def runner_key(engine: str, *, group_epochs: int, total: int, option: int,
                      for a in obj.data_args())
     return (engine, int(total), int(option), int(buf_len), int(group_epochs),
             float(drop_prob), mesh_fingerprint(mesh),
-            obj.runner_static_key(), data_sig)
+            obj.runner_static_key(), data_sig, _fused_mode_key(fused))
 
 
 def _counted(fn):
@@ -151,9 +162,10 @@ def _counted(fn):
 
 def get_group_runner(engine: str, *, group_epochs: int, total: int,
                      option: int, buf_len: int, drop_prob: float,
-                     mesh: Optional[Mesh], obj):
+                     mesh: Optional[Mesh], obj, fused: bool = False):
     """The jitted runner for one (engine, M̃, option, buf_len, …) group,
-    built at most once per key.
+    built at most once per key. ``fused=True`` keys and builds the Pallas
+    sweep-epoch megakernel body instead of the vmap body.
 
     The returned callable takes ``(*obj.data_args(), *row_args)`` with
     every row array row-leading; under a mesh it is shard_mapped over the
@@ -165,7 +177,7 @@ def get_group_runner(engine: str, *, group_epochs: int, total: int,
     """
     key = runner_key(engine, group_epochs=group_epochs, total=total,
                      option=option, buf_len=buf_len, drop_prob=drop_prob,
-                     mesh=mesh, obj=obj)
+                     mesh=mesh, obj=obj, fused=fused)
     num_data = len(obj.data_args())
     with _LOCK:
         runner = _RUNNERS.get(key)
@@ -177,7 +189,8 @@ def get_group_runner(engine: str, *, group_epochs: int, total: int,
         fn, num_row = _sweep._group_fn(engine, obj=obj, num_data=num_data,
                                        epochs=group_epochs,
                                        total=total, buf_len=buf_len,
-                                       option=option, drop_prob=drop_prob)
+                                       option=option, drop_prob=drop_prob,
+                                       fused=fused)
         if mesh is not None:
             fn = _sweep._shard_group_fn(fn, mesh, num_data, num_row)
         runner = jax.jit(_counted(fn))

@@ -249,6 +249,7 @@ def test_tau_axis_shares_one_group_at_fixed_thread_count(obj):
                        num_threads=4, inner_steps=25) for t in (1, 2, 3)]
     plan = plan_sweep(obj, 2, specs)
     assert len(plan.groups) == 1
-    (ofp, engine, total, option, buf_len), = plan.groups
+    (ofp, engine, total, option, buf_len, fused), = plan.groups
+    assert fused is False               # default engine mode is vmap
     assert ofp == obj.fingerprint()
     assert buf_len == 4                 # p, not max(τ)+1 of the members

@@ -11,6 +11,8 @@ divide the device count and sizes that need padding, and composed with
 masked per-row epochs. This is the XLA:CPU calibration of the bit-exactness
 contract; re-validate per backend before trusting it on TPU/GPU.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -271,6 +273,25 @@ def test_pytree_objectives_http_sharded_bit_identical(mesh):
                                                 "b1", "w2"}
     finally:
         unregister_objective("sharded-test-ncv")
+
+
+def test_fused_engine_sharded_matches_vmap_unsharded(obj, mesh):
+    """The fused Pallas megakernel path (interpret mode on this CPU host)
+    composes with shard_map row sharding: a sharded fused sweep over all
+    three algos — at a row count that needs padding under 8 devices, with
+    mixed per-row epoch budgets — is bit-identical to the unsharded VMAP
+    path, closing fused==vmap and sharded==unsharded in one assertion."""
+    specs = [SweepSpec(scheme=SCHEMES[c % 3], step_size=0.5, tau=3,
+                       num_threads=4, inner_steps=25, seed=c,
+                       epochs=(c % 2) + 1)
+             for c in range(3)]
+    specs += [SweepSpec(algo="hogwild", scheme="unlock", step_size=0.5,
+                        tau=2, num_threads=3, seed=8),
+              SweepSpec(algo="svrg", step_size=0.5, inner_steps=30, seed=9)]
+    fused = [dataclasses.replace(s, engine_mode="fused") for s in specs]
+    base = run_sweep(obj, 2, specs)
+    shard_fused = run_sweep(obj, 2, fused, mesh=mesh)
+    _assert_same(base, shard_fused)
 
 
 def test_model_axis_mesh_degrades_to_unsharded(obj):
