@@ -38,6 +38,10 @@ REQUIRED_KEYS: Dict[str, Tuple[str, ...]] = {
     "frontier_stability": (),
     "nonconvex_frontier": (),
     "fig1_convergence": (),
+    # written by `python -m repro.analysis --json-out` in the repro-lint
+    # CI lane; diagnostics must be [] for the lane to pass, but the
+    # artifact records suppression counts for trend tooling either way
+    "repro_lint": ("files", "diagnostics", "suppressions", "rules"),
 }
 
 # kernel_sweep is additionally checked per shape: these are the keys the
@@ -82,11 +86,16 @@ def check_file(path: str) -> List[str]:
 
 
 def main(argv: List[str]) -> int:
-    args = [a for a in argv if not a.startswith("--")]
+    # everything after --expect is a benchmark NAME, not the scan dir
+    # (the old `not a.startswith("--")` filter misread the first expected
+    # name as the positional directory)
+    args = list(argv)
+    expected: List[str] = []
+    if "--expect" in args:
+        i = args.index("--expect")
+        expected = args[i + 1:]
+        args = args[:i]
     directory = args[0] if args else os.environ.get("BENCH_DIR", ".")
-    expected = []
-    if "--expect" in argv:
-        expected = argv[argv.index("--expect") + 1:]
     try:
         entries = os.listdir(directory)
     except OSError as e:

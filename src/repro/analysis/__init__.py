@@ -1,0 +1,21 @@
+"""repro-lint: AST-enforced house invariants for the sweep stack.
+
+``python -m repro.analysis [paths]`` — a ruff-style checker for the
+contracts the type system cannot carry:
+
+  RL001  vmap-bitwise-stable math in *_stable / loss_fixed_order scopes
+  RL002  trace-safety of jit/pallas-reachable functions
+  RL003  guarded-by lock discipline in the service/server tier
+  RL004  group/runner cache-key completeness (the buf_len bug class)
+  RL005  Pallas kernel-module purity
+  RL000  suppression hygiene (reasons mandatory, stale ignores reported)
+
+Per-line escapes: ``# repro-lint: ignore[RL002] <why it is fine>``.
+Contracts are documented in docs/INVARIANTS.md. The package is
+stdlib-only so the CI lane needs no installs.
+"""
+from repro.analysis.diagnostics import RULES, Diagnostic
+from repro.analysis.engine import LintResult, lint_paths, lint_source
+
+__all__ = ["RULES", "Diagnostic", "LintResult", "lint_paths",
+           "lint_source"]

@@ -1,0 +1,124 @@
+"""Small AST helpers shared by the repro-lint checkers (stdlib-only —
+the linter must run in CI lanes that install nothing, so no jax/numpy
+imports anywhere under repro.analysis)."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jnp.sum' / 'jax.numpy.sum' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def keyword(node: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def walk_functions(tree: ast.AST) -> Iterator[FunctionNode]:
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_NODES):
+            yield node
+
+
+def positional_params(fn: Union[FunctionNode, ast.Lambda]) -> Tuple[str, ...]:
+    """Positional(-or-keyword) parameter names — the house convention's
+    TRACER arguments (kw-only params after ``*`` are the static config)."""
+    args = fn.args
+    return tuple(a.arg for a in args.posonlyargs + args.args
+                 if a.arg not in ("self", "cls"))
+
+
+def kwonly_params(fn: Union[FunctionNode, ast.Lambda]) -> Tuple[str, ...]:
+    return tuple(a.arg for a in fn.args.kwonlyargs)
+
+
+def param_names(fn: Union[FunctionNode, ast.Lambda]) -> Tuple[str, ...]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return tuple(names)
+
+
+def is_self_attr(node: ast.AST, attr: Optional[str] = None) -> bool:
+    """True for ``self.<attr>`` (any attr when ``attr`` is None)."""
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and (attr is None or node.attr == attr))
+
+
+def local_bindings(scope: ast.AST) -> dict:
+    """name -> value expression for simple assignments DIRECTLY in a
+    function/module body (no recursion into nested functions): the scope
+    RL002 resolves a jitted closure's free variables against."""
+    out = {}
+    body = getattr(scope, "body", [])
+    stack = list(body)
+    while stack:
+        stmt = stack.pop(0)
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    out[tgt.id] = stmt.value
+                elif isinstance(tgt, ast.Tuple):
+                    for el in tgt.elts:
+                        if isinstance(el, ast.Name):
+                            out[el.id] = stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if isinstance(stmt.target, ast.Name):
+                out[stmt.target.id] = stmt.value
+        elif isinstance(stmt, (ast.If, ast.For, ast.While, ast.With,
+                               ast.Try)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                for sub in getattr(stmt, field, []):
+                    if isinstance(sub, ast.excepthandler):
+                        stack.extend(sub.body)
+                    else:
+                        stack.append(sub)
+    return out
+
+
+def free_names(fn: Union[FunctionNode, ast.Lambda]) -> List[ast.Name]:
+    """Name loads in ``fn``'s body that are not bound by its own params or
+    local assignments (candidate closure captures), in source order."""
+    bound = set(param_names(fn))
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for node in body:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx,
+                                                        (ast.Store,)):
+                bound.add(sub.id)
+            elif isinstance(sub, FUNC_NODES):
+                bound.add(sub.name)
+                bound.update(param_names(sub))
+            elif isinstance(sub, ast.Lambda):
+                bound.update(param_names(sub))
+    out = []
+    for node in body:
+        for sub in ast.walk(node):
+            if (isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load)
+                    and sub.id not in bound):
+                out.append(sub)
+    return out

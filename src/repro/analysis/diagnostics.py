@@ -1,0 +1,40 @@
+"""Diagnostic records and the rule registry for repro-lint.
+
+Every checker reports `Diagnostic`s with a STABLE rule code (RL001…) so
+suppressions (`# repro-lint: ignore[RL001] reason`), CI greps and the docs
+(docs/INVARIANTS.md) can all key on the same identifier forever. Codes are
+never reused; retired rules keep their number.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+# code -> one-line summary (the CLI's --explain output and the docs anchor)
+RULES: Dict[str, str] = {
+    "RL000": "suppression hygiene: every `# repro-lint: ignore[...]` needs a "
+             "reason and must actually suppress something",
+    "RL001": "bitwise-stability: vmap-bitwise-stable scopes (*_stable / "
+             "loss_fixed_order) may only use elementwise ops, explicit-axis "
+             "reduces, and fixed-order scans",
+    "RL002": "trace-safety: jit/pallas bodies must not close over arrays, "
+             "branch on tracer arguments, or return unhashable statics",
+    "RL003": "lock-discipline: attributes declared guarded-by a lock may "
+             "only be touched while holding it",
+    "RL004": "key-completeness: every static that shapes a compiled program "
+             "must reach the group/runner cache keys",
+    "RL005": "kernel purity: Pallas kernel bodies are effect-free (no "
+             "print/env/callbacks; mode decisions live in kernels/dispatch)",
+}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One finding: ``path:line: code message`` (sortable in file order)."""
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"

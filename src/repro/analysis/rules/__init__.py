@@ -1,0 +1,19 @@
+"""repro-lint checkers, one module per rule code."""
+from repro.analysis.rules import (  # noqa: F401
+    rl001_stability,
+    rl002_trace,
+    rl003_locks,
+    rl004_keys,
+    rl005_kernel,
+)
+
+FILE_CHECKERS = (
+    rl001_stability.check,
+    rl002_trace.check,
+    rl003_locks.check,
+    rl005_kernel.check,
+)
+
+PROJECT_CHECKERS = (
+    rl004_keys.check_project,
+)

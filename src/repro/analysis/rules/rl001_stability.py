@@ -1,0 +1,102 @@
+"""RL001 — the vmap-bitwise-stable contract, mechanically.
+
+The sweep engine batches every objective's math with `jax.vmap` and
+promises the batched bits equal the sequential driver's
+(`repro.core.objective`, module docstring). On XLA:CPU that holds only for
+elementwise ops, single-axis reduces with an EXPLICIT axis, and
+fixed-order `lax.scan` accumulation — a full reduction to a scalar
+(axis-less `jnp.sum`/`jnp.mean`) or a `dot_general` (``@``, `jnp.dot`,
+`jnp.matmul`, `jnp.einsum`) may change its summation order under a leading
+batch axis and silently break bit-parity.
+
+This checker enforces the contract inside the functions that carry it:
+any function named ``loss_fixed_order``, ending in ``_stable`` or starting
+with ``_stable`` (the stable-math helpers), plus functions nested inside
+them. Within that scope it flags
+
+  * reductions called WITHOUT an explicit ``axis=`` (or with
+    ``axis=None``): sum, mean, nansum, nanmean, std, var, prod, logsumexp;
+  * always-unstable accumulation primitives: ``@`` (MatMult), dot, vdot,
+    inner, matmul, tensordot, einsum, trace — rewrite as a
+    broadcast-multiply + trailing-axis reduce (`_stable_matmul`) or a
+    `_fixed_order_sum` scan.
+
+An axis-less reduce over a known-1-D value is numerically fine, but the
+AST cannot see ranks — write the axis out (``axis=-1``) so the reduce is
+stable for every rank, or suppress with the 1-D justification.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.astutil import FUNC_NODES, call_name, keyword
+from repro.analysis.diagnostics import Diagnostic
+
+# reducers that are stable ONLY with an explicit single axis
+_NEEDS_AXIS = {"sum", "mean", "nansum", "nanmean", "std", "var", "prod",
+               "logsumexp"}
+# accumulation primitives whose internal order XLA may rewrite under vmap
+_FORBIDDEN = {"dot", "vdot", "inner", "matmul", "tensordot", "einsum",
+              "trace", "norm"}
+# module roots the reducers are looked up on (bare names are NOT flagged:
+# python's builtin sum() is a fixed-order left fold)
+_ARRAY_ROOTS = ("jnp", "np", "numpy", "jax.numpy", "jax.nn", "jsp",
+                "jax.scipy.special", "jax.lax")
+
+
+def _is_array_call(name: str) -> bool:
+    root, _, attr = name.rpartition(".")
+    return bool(root) and any(
+        root == r or root.endswith("." + r) for r in _ARRAY_ROOTS)
+
+
+def _in_scope(name: str) -> bool:
+    return (name == "loss_fixed_order" or name.endswith("_stable")
+            or name.startswith("_stable"))
+
+
+def _check_scope(path: str, fn: ast.AST, scope: str,
+                 out: List[Diagnostic]) -> None:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            out.append(Diagnostic(
+                path, node.lineno, "RL001",
+                f"`@` matmul inside vmap-bitwise-stable scope {scope!r} — "
+                "dot_general may reorder its accumulation under a batch "
+                "axis; use a broadcast-multiply + trailing-axis reduce "
+                "(see _stable_matmul)"))
+        elif isinstance(node, ast.Call):
+            name = call_name(node)
+            if name is None or not _is_array_call(name):
+                continue
+            attr = name.rpartition(".")[2]
+            if attr in _FORBIDDEN:
+                out.append(Diagnostic(
+                    path, node.lineno, "RL001",
+                    f"order-unstable `{name}` inside vmap-bitwise-stable "
+                    f"scope {scope!r} — use a broadcast-reduce or a "
+                    "fixed-order scan (_fixed_order_sum)"))
+            elif attr in _NEEDS_AXIS:
+                axis = keyword(node, "axis")
+                # positional axis (arg 2 for np-style reducers) also counts
+                has_positional_axis = len(node.args) >= 2
+                if (axis is None and not has_positional_axis) or (
+                        isinstance(axis, ast.Constant)
+                        and axis.value is None):
+                    out.append(Diagnostic(
+                        path, node.lineno, "RL001",
+                        f"axis-less `{name}` inside vmap-bitwise-stable "
+                        f"scope {scope!r} reduces every axis — give an "
+                        "explicit trailing `axis=` or accumulate via "
+                        "_fixed_order_sum"))
+
+
+def check(path: str, tree: ast.AST, source: str) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    # walk top-level scopes; once inside a stable-named function, the whole
+    # subtree (nested defs included) carries the contract
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_NODES) and _in_scope(node.name):
+            _check_scope(path, node, node.name, out)
+    return out

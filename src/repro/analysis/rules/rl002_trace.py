@@ -1,0 +1,205 @@
+"""RL002 — trace-safety for jit/pallas-reachable code.
+
+Three failure modes the runner-cache architecture (PR 4) forbids, each
+of which burned us or nearly did:
+
+  1. **Array closure captures.** A lambda handed to ``jax.jit`` /
+     ``pl.pallas_call`` that closes over an ndarray bakes the array into
+     the traced program: the jit cache keys on the captured object's id,
+     retraces per instance, and pins device memory. House rule: data
+     enters as runtime arguments; closures may capture only hashable
+     statics and an objective's pure methods. The checker resolves a
+     jitted lambda's free names against the enclosing scope's simple
+     assignments and flags bindings that are array-ish (``jnp.*``/``np.*``
+     constructors, ``jax.random.*``, ``*.data_args()``).
+
+  2. **Python ``if``/``while`` on a tracer.** In the traced cores the
+     house convention is positional params = tracers, kw-only params
+     (after ``*``) = static config. Branching a Python conditional on a
+     positional param raises ConcretizationTypeError at trace time — or
+     worse, silently specializes. Scope: functions named
+     ``*_epoch_core``/``*_epochs_core`` and functions decorated with
+     ``jax.jit``. Shape/dtype probes (``x.shape``, ``x.ndim``,
+     ``x.dtype``, ``x.size``, ``len(x)``, ``isinstance(x, …)``) are
+     static and exempt.
+
+  3. **Unhashable static keys.** ``static_key`` / ``runner_static_key`` /
+     ``runner_key`` feed dict-key material for the runner cache; a list /
+     dict / set / bare ``sorted(...)`` in the return value raises
+     TypeError only on the cache path, far from the author. Wrapping in
+     ``tuple(...)`` or ``frozenset(...)`` is the sanctioned fix and is
+     recognized.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.astutil import (
+    FUNC_NODES,
+    call_name,
+    dotted_name,
+    free_names,
+    local_bindings,
+    positional_params,
+)
+from repro.analysis.diagnostics import Diagnostic
+
+_JIT_CALLS = {"jax.jit", "jit", "pl.pallas_call", "pallas_call", "jax.pmap"}
+_CORE_SUFFIXES = ("_epoch_core", "_epochs_core")
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_PROBES = {"len", "isinstance"}
+_KEY_FUNCS = {"static_key", "runner_static_key", "runner_key"}
+_ARRAYISH_ROOTS = ("jnp.", "np.", "numpy.", "jax.numpy.", "jax.random.")
+_UNHASHABLE_CALLS = {"list", "dict", "set", "sorted"}
+_UNHASHABLE_NODES = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                     ast.DictComp, ast.SetComp, ast.GeneratorExp)
+
+
+def _is_arrayish(expr: ast.AST) -> bool:
+    """Heuristic: does this bound value look like device/host array data?"""
+    if isinstance(expr, ast.Call):
+        name = call_name(expr)
+        if name is None:
+            return False
+        if name.startswith(_ARRAYISH_ROOTS):
+            return True
+        if name.endswith(".data_args") or name.endswith(".load_data"):
+            return True
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return any(_is_arrayish(el) for el in expr.elts)
+    if isinstance(expr, ast.Subscript):
+        return _is_arrayish(expr.value)
+    return False
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        name = dotted_name(dec)
+        if name in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call):
+            name = call_name(dec)
+            if name in ("jax.jit", "jit"):
+                return True
+            if name in ("partial", "functools.partial") and dec.args:
+                inner = dotted_name(dec.args[0])
+                if inner in ("jax.jit", "jit"):
+                    return True
+    return False
+
+
+def _tracer_refs(node: ast.AST, tracers: set) -> List[ast.Name]:
+    """Tracer-name loads in a conditional's test, pruning static probes
+    (.shape/.ndim/.dtype/.size, len(), isinstance())."""
+    if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+        return []
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in _STATIC_PROBES:
+            return []
+    refs: List[ast.Name] = []
+    if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+            and node.id in tracers):
+        refs.append(node)
+    for child in ast.iter_child_nodes(node):
+        refs.extend(_tracer_refs(child, tracers))
+    return refs
+
+
+def _find_unhashable(node: ast.AST) -> Optional[ast.AST]:
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in ("tuple", "frozenset") and len(node.args) == 1:
+            return None  # explicit conversion to a hashable container
+        if name in _UNHASHABLE_CALLS:
+            return node
+    if isinstance(node, _UNHASHABLE_NODES):
+        return node
+    for child in ast.iter_child_nodes(node):
+        hit = _find_unhashable(child)
+        if hit is not None:
+            return hit
+    return None
+
+
+def _scopes_with_bindings(tree: ast.AST) -> Dict[int, dict]:
+    """id(scope node) -> local simple-assignment bindings, module included."""
+    scopes = {id(tree): local_bindings(tree)}
+    for node in ast.walk(tree):
+        if isinstance(node, FUNC_NODES):
+            scopes[id(node)] = local_bindings(node)
+    return scopes
+
+
+def _enclosing_scope(tree: ast.AST) -> Dict[int, ast.AST]:
+    """id(node) -> nearest enclosing function (or module) for every node."""
+    owner: Dict[int, ast.AST] = {}
+
+    def visit(node: ast.AST, scope: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            owner[id(child)] = scope
+            visit(child, child if isinstance(child, FUNC_NODES) else scope)
+
+    owner[id(tree)] = tree
+    visit(tree, tree)
+    return owner
+
+
+def check(path: str, tree: ast.AST, source: str) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    bindings_by_scope = _scopes_with_bindings(tree)
+    owner = _enclosing_scope(tree)
+
+    for node in ast.walk(tree):
+        # 1. array captures into jit/pallas lambdas
+        if isinstance(node, ast.Call) and call_name(node) in _JIT_CALLS:
+            for arg in node.args[:1]:
+                if not isinstance(arg, ast.Lambda):
+                    continue
+                scope = owner.get(id(node), tree)
+                bindings = bindings_by_scope.get(id(scope), {})
+                seen = set()
+                for ref in free_names(arg):
+                    if ref.id in seen:
+                        continue
+                    seen.add(ref.id)
+                    bound = bindings.get(ref.id)
+                    if bound is not None and _is_arrayish(bound):
+                        out.append(Diagnostic(
+                            path, arg.lineno, "RL002",
+                            f"jitted lambda closes over array-valued "
+                            f"{ref.id!r} — captured arrays key the jit "
+                            "cache by object id and pin memory; pass it "
+                            "as a runtime argument instead"))
+
+        # 2. python control flow on tracer params in traced cores
+        if isinstance(node, FUNC_NODES) and (
+                node.name.endswith(_CORE_SUFFIXES)
+                or _is_jit_decorated(node)):
+            tracers = set(positional_params(node))
+            if tracers:
+                for sub in ast.walk(node):
+                    if isinstance(sub, (ast.If, ast.While)):
+                        for ref in _tracer_refs(sub.test, tracers):
+                            out.append(Diagnostic(
+                                path, sub.lineno, "RL002",
+                                f"Python `{type(sub).__name__.lower()}` on "
+                                f"tracer param {ref.id!r} in traced core "
+                                f"{node.name!r} — positional params are "
+                                "tracers (statics go after `*`); use "
+                                "lax.cond/jnp.where or make it kw-only"))
+                            break
+
+        # 3. unhashable values returned from cache-key functions
+        if isinstance(node, FUNC_NODES) and node.name in _KEY_FUNCS:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and sub.value is not None:
+                    hit = _find_unhashable(sub.value)
+                    if hit is not None:
+                        out.append(Diagnostic(
+                            path, sub.lineno, "RL002",
+                            f"{node.name}() returns an unhashable "
+                            "container — cache keys must be hashable; "
+                            "wrap in tuple(...)/frozenset(...)"))
+    return out

@@ -304,7 +304,7 @@ def run_asysvrg(obj: Objective, epochs: int, cfg: SVRGConfig,
     data = obj.data_args()
     epoch_fn = jax.jit(lambda w, k: asysvrg_epoch(
         obj, w, k, cfg, delay_kind=delay_kind, drop_prob=drop_prob))
-    loss_fn = jax.jit(lambda w: obj.flat_loss(data, w))
+    loss_fn = jax.jit(lambda w: obj.flat_loss(data, w))  # repro-lint: ignore[RL002] sequential reference driver: one obj per process, capture is intentional; the cached-runner path (service/cache) passes data as arguments
 
     history = [float(loss_fn(w))]
     passes = [0.0]

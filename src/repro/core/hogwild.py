@@ -166,7 +166,7 @@ def run_hogwild(obj: Objective, epochs: int, step_size: float,
     delay_id = DELAY_IDS["zero"] if tau == 0 else DELAY_IDS[delay_kind]
     data = obj.data_args()
 
-    runner = jax.jit(lambda w0_, k, g0, d: _hogwild_epochs_core(
+    runner = jax.jit(lambda w0_, k, g0, d: _hogwild_epochs_core(  # repro-lint: ignore[RL002] sequential reference driver: single-shot jit per call, capture is intentional; the cached-runner path (service/cache) passes data as arguments
         obj, data, w0_, k, g0, d,
         jnp.int32(tau), jnp.int32(SCHEME_IDS[scheme]), jnp.int32(delay_id),
         epochs=epochs, total=total, buf_len=tau + 1, drop_prob=drop_prob))

@@ -92,7 +92,7 @@ def sample_grad_stable(X, y, l2: float, w, i):
     """∇f_i(w) (vmap-bitwise-stable)."""
     x = X[i]
     yi = y[i]
-    s = jax.nn.sigmoid(-yi * jnp.sum(x * w))
+    s = jax.nn.sigmoid(-yi * jnp.sum(x * w, axis=-1))
     return -yi * s * x + l2 * w
 
 

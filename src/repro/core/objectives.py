@@ -230,7 +230,7 @@ class NonconvexLogistic(Objective):
         X, y, lam, alpha = data
         x = X[i]
         yi = y[i]
-        s = jax.nn.sigmoid(-yi * jnp.sum(x * w))
+        s = jax.nn.sigmoid(-yi * jnp.sum(x * w, axis=-1))
         return -yi * s * x + self._penalty_grad(lam, alpha, w)
 
     # flat == pytree for a (p,) parameter vector: skip the generic bridge

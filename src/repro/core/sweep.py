@@ -265,7 +265,7 @@ class _Resolved(NamedTuple):
     scheme_id: int
     delay_id: int
     option: int          # 0 for hogwild (engine has no option switch)
-    passes_per_epoch: float
+    passes_per_epoch: float  # repro-lint: ignore[RL004] derived from engine+total+n (all keyed); pass-count accounting only, never shapes the compiled program
     buf_len: int         # ring-buffer length, pinned per-row (see _resolve)
     epochs: int          # this row's outer-epoch budget
     fused: bool = False  # True = Pallas megakernel, False = vmap path

@@ -89,7 +89,7 @@ class WidthRegistry:
 
     def __init__(self, max_pad_factor: float = 2.0):
         self.max_pad_factor = max_pad_factor
-        self._widths: Dict[tuple, List[int]] = {}
+        self._widths: Dict[tuple, List[int]] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def __call__(self, key: tuple, group_epochs: int, natural: int) -> int:
@@ -170,13 +170,16 @@ class ServeDaemon:
         self.service = service
         self.policy = policy
         self.fairness = fairness
-        self.stats = DaemonStats()
-        self.last_error: Optional[BaseException] = None
+        # stats/last_error are mutated by the flush thread AND by HTTP
+        # threads entering through flush_now(); every touch takes _lock
+        # (readers go through stats_snapshot()/last_error_snapshot())
+        self.stats = DaemonStats()  # guarded-by: _lock
+        self.last_error: Optional[BaseException] = None  # guarded-by: _lock
         self._spool_dir = spool_dir
         self._widths = (WidthRegistry(policy.max_pad_factor)
                         if policy.stable_widths else None)
-        self._jobs: List[Tuple[JobHandle, Checkpointer, bool]] = []
-        self._next_job_id = 0
+        self._jobs: List[Tuple[JobHandle, Checkpointer, bool]] = []  # guarded-by: _lock
+        self._next_job_id = 0  # guarded-by: _lock
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._drain = True               # stop() overrides before _stop
@@ -219,11 +222,12 @@ class ServeDaemon:
         self.service.remove_submit_listener(self._wake.set)
         if self.service.width_policy is self._widths:
             self.service.width_policy = None
-        if drain and self.service.pending() and self.last_error is not None:
+        err = self.last_error_snapshot()
+        if drain and self.service.pending() and err is not None:
             raise RuntimeError(
                 f"drain left {self.service.pending()} request(s) queued "
                 "after repeated dispatch failures; they remain pending on "
-                "the service") from self.last_error
+                "the service") from err
 
     def __enter__(self) -> "ServeDaemon":
         return self.start()
@@ -258,6 +262,20 @@ class ServeDaemon:
         with self._lock:
             return len(self._jobs)
 
+    # ------------------------------------------------------------ snapshots
+    def stats_snapshot(self) -> DaemonStats:
+        """A consistent COPY of the counters. The live ``stats`` object is
+        mutated concurrently by the flush thread and by HTTP threads inside
+        ``flush_now``; exporters (`repro.server.metrics`) must read through
+        here, never the live object."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
+
+    def last_error_snapshot(self) -> Optional[BaseException]:
+        """The most recent dispatch failure (None once a flush succeeds)."""
+        with self._lock:
+            return self.last_error
+
     # ------------------------------------------------------------ triggers
     def _flush_due(self) -> Optional[str]:
         """Which policy trigger (if any) says the queue should flush now."""
@@ -281,41 +299,47 @@ class ServeDaemon:
     def flush_now(self) -> List[int]:
         """Force one fair-share flush from the caller's thread (the HTTP
         /flush endpoint and the drain path)."""
-        self.stats.forced_flushes += 1
+        with self._lock:
+            self.stats.forced_flushes += 1
         return self._flush_once()
 
     def _flush_once(self) -> List[int]:
         selector = self.fairness.select if self.fairness is not None else None
         try:
-            done = self.service.flush(selector)
-            self.last_error = None
+            done = self.service.flush(selector)   # dispatch runs unlocked
+            with self._lock:
+                self.last_error = None
             return done
         except Exception as e:             # requests were re-queued by the
-            self.stats.flush_errors += 1   # service; remember and back off
-            self.last_error = e            # so a poisoned dispatch cannot
-            return []                      # spin the daemon hot
+            with self._lock:               # service; remember and back off
+                self.stats.flush_errors += 1   # so a poisoned dispatch
+                self.last_error = e            # cannot spin the daemon hot
+            return []
 
     # ------------------------------------------------------------ main loop
     def _run(self) -> None:
         while not self._stop.is_set():
+            err = self.last_error_snapshot()   # one coherent view per turn
             trigger = self._flush_due()
-            if trigger is not None and self.last_error is None:
-                setattr(self.stats, f"{trigger}_flushes",
-                        getattr(self.stats, f"{trigger}_flushes") + 1)
+            if trigger is not None and err is None:
+                with self._lock:
+                    setattr(self.stats, f"{trigger}_flushes",
+                            getattr(self.stats, f"{trigger}_flushes") + 1)
                 self._flush_once()
                 continue                   # fairness may have left a slice
-            if self.last_error is None and self._job_slice():
+            if err is None and self._job_slice():
                 continue                   # more job groups may be waiting
             wait = self._next_deadline_s()
-            if wait is not None and wait <= 0 and self.last_error is None:
+            if wait is not None and wait <= 0 and err is None:
                 continue                   # deadline crossed since the
             #                                trigger check: re-check now
-            if wait is None or self.last_error is not None:
+            if wait is None or err is not None:
                 wait = self._POLL_S        # idle heartbeat / error backoff
             self._wake.wait(min(wait, self._POLL_S))
             self._wake.clear()
-            if self.last_error is not None:
-                self.last_error = None     # one backoff period, then retry
+            with self._lock:
+                if self.last_error is not None:
+                    self.last_error = None  # one backoff period, then retry
         if self._drain:
             # "shutdown loses nothing": retry erroring flushes a few times
             # before giving up; a persistent failure is surfaced by stop()
@@ -342,15 +366,18 @@ class ServeDaemon:
                 handle.specs, handle.epochs, checkpointer=ckpt,
                 max_groups=self.policy.job_groups_per_slice)
         except Exception as e:
-            self.stats.jobs_failed += 1
+            with self._lock:
+                self.stats.jobs_failed += 1
             handle._finish(None, e)
             if owns_spool:
                 ckpt.delete()
             return True
         handle.slices += 1
-        self.stats.job_slices += 1
+        with self._lock:
+            self.stats.job_slices += 1
+            if done:
+                self.stats.jobs_completed += 1
         if done:
-            self.stats.jobs_completed += 1
             handle._finish(result, None)
             if owns_spool:
                 ckpt.delete()

@@ -86,8 +86,8 @@ class FairShare:
         self.quantum_rows = quantum_rows
         self.max_rows_per_flush = max_rows_per_flush
         self._default = default
-        self._policies: Dict[str, TenantPolicy] = {}
-        self._deficit: Dict[str, float] = {}
+        self._policies: Dict[str, TenantPolicy] = {}  # guarded-by: _lock
+        self._deficit: Dict[str, float] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------- registry
@@ -114,7 +114,7 @@ class FairShare:
         with self._lock:
             return dict(self._deficit)
 
-    def _class_of(self, req: SweepRequest) -> int:
+    def _class_of(self, req: SweepRequest) -> int:  # holds: _lock
         """A request's own priority tag wins; 0 (the untagged default)
         falls back to the tenant's policy class."""
         if req.priority != 0:

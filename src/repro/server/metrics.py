@@ -61,11 +61,13 @@ def snapshot(service: SweepService, daemon: Optional[ServeDaemon] = None,
                          "size": _cache.cache_size()},
     }
     if daemon is not None:
-        out["daemon"] = {**dataclasses.asdict(daemon.stats),
+        # locked copies — the live stats object is concurrently mutated by
+        # the flush thread and flush_now() callers (RL003 guards it)
+        err = daemon.last_error_snapshot()
+        out["daemon"] = {**dataclasses.asdict(daemon.stats_snapshot()),
                          "jobs_pending": daemon.jobs_pending(),
                          "policy": dataclasses.asdict(daemon.policy),
-                         "last_error": (repr(daemon.last_error)
-                                        if daemon.last_error else None)}
+                         "last_error": repr(err) if err else None}
     if fairness is not None:
         out["fairness"] = {
             "quantum_rows": fairness.quantum_rows,

@@ -116,7 +116,7 @@ class SweepService:
         # width policy keeps dispatched batch widths at previously-compiled
         # values; submit listeners wake the background flush daemon
         self.width_policy = width_policy
-        self._submit_listeners: List[Callable[[], None]] = []
+        self._submit_listeners: List[Callable[[], None]] = []  # guarded-by: _lock
         # queue/id/results/stats mutations hold _lock so concurrent tenant
         # threads can't mint duplicate ids or lose a submit that races a
         # flush; the XLA dispatch itself runs OUTSIDE the lock (re-entrant
@@ -125,20 +125,20 @@ class SweepService:
         # ids detached from the queue but not yet in _results; result()
         # waits on this condition instead of misreporting a mid-dispatch
         # request as unknown
-        self._inflight: set = set()
+        self._inflight: set = set()  # guarded-by: _lock
         self._done_cv = threading.Condition(self._lock)
-        self._pending: List[SweepRequest] = []
+        self._pending: List[SweepRequest] = []  # guarded-by: _lock
         # completed results are FIFO-bounded (like the LRU-bounded runner
         # cache one layer down): a long-lived server must not accumulate
         # every tenant's histories forever. Clients read soon after flush;
         # evicted ids raise KeyError like unknown ones.
-        self._results: "OrderedDict[int, SweepResult]" = OrderedDict()
+        self._results: "OrderedDict[int, SweepResult]" = OrderedDict()  # guarded-by: _lock
         self._max_results = max_results
         # ids a thread is currently blocked on in wait_result()/result():
         # the retention eviction skips these — a result must never be
         # thrown away while its consumer is blocked waiting for it
-        self._watched: Dict[int, int] = {}
-        self._next_id = 0
+        self._watched: Dict[int, int] = {}  # guarded-by: _lock
+        self._next_id = 0  # guarded-by: _lock
         # service-local cache accounting, credited PER LOOKUP: dispatch
         # windows install this sink on their thread via
         # `cache.scoped_counters`, so only lookups this service actually
@@ -146,25 +146,25 @@ class SweepService:
         # concurrently (the old absorb-the-global-delta scheme was racy
         # across services and is gone)
         self._cache_sink = _cache._Counters()
-        self._requests_submitted = 0
-        self._requests_completed = 0
-        self._rows_submitted = 0
-        self._rows_coalesced = 0
-        self._groups_dispatched = 0
-        self._groups_merged = 0
-        self._rows_padded = 0
-        self._flushes = 0
+        self._requests_submitted = 0  # guarded-by: _lock
+        self._requests_completed = 0  # guarded-by: _lock
+        self._rows_submitted = 0  # guarded-by: _lock
+        self._rows_coalesced = 0  # guarded-by: _lock
+        self._groups_dispatched = 0  # guarded-by: _lock
+        self._groups_merged = 0  # guarded-by: _lock
+        self._rows_padded = 0  # guarded-by: _lock
+        self._flushes = 0  # guarded-by: _lock
         # tenant -> [rows submitted, rows completed] (metrics endpoint);
         # FIFO-bounded like the results store — tenant tags are arbitrary
         # client-supplied strings, so an adversarial/buggy client minting a
         # fresh tag per request must not grow the map without bound
-        self._tenant_rows: "OrderedDict[str, List[int]]" = OrderedDict()
+        self._tenant_rows: "OrderedDict[str, List[int]]" = OrderedDict()  # guarded-by: _lock
         self._max_tenants = max_tenants
         # recent flush dispatch durations + request submit->complete
         # latencies (seconds), bounded so a long-lived server can't grow
         # them; the metrics layer derives p50/p95 from these
-        self._flush_latencies: deque = deque(maxlen=latency_window)
-        self._request_latencies: deque = deque(maxlen=latency_window)
+        self._flush_latencies: deque = deque(maxlen=latency_window)  # guarded-by: _lock
+        self._request_latencies: deque = deque(maxlen=latency_window)  # guarded-by: _lock
 
     # ---------------------------------------------------------------- queue
     def submit(self, specs: Sequence[SweepSpec],
@@ -290,7 +290,7 @@ class SweepService:
             self._done_cv.notify_all()
         return sorted(results)
 
-    def _missing(self, request_id: int) -> KeyError:
+    def _missing(self, request_id: int) -> KeyError:  # holds: _lock
         """The right error for an id that is not pending/inflight/stored.
         Every minted id enters the queue, so an id below the mint counter
         MUST have completed and been released — distinguishable from a

@@ -1,0 +1,41 @@
+"""Hypothesis property tests for repro-lint (own module so the skip, when
+hypothesis is absent, doesn't take the deterministic fixtures in
+test_analysis.py down with it)."""
+import pytest
+
+from repro.analysis import RULES, lint_source
+from repro.analysis.suppress import scan_comments
+
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="analysis property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+_code = st.sampled_from(sorted(RULES))
+_reason = st.text(
+    st.characters(min_codepoint=32, max_codepoint=126,
+                  exclude_characters="#\\"),
+    min_size=1, max_size=40).map(str.strip).filter(bool)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_code, _reason)
+def test_suppression_comment_roundtrip(code, reason):
+    """Any well-formed ignore-comment parses back to its code + reason."""
+    src = f"x = 1  # repro-lint: ignore[{code}] {reason}\n"
+    sup = scan_comments(src).suppressions[1]
+    assert sup.codes == (code,)
+    assert sup.reason == reason
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(st.characters(min_codepoint=32, max_codepoint=126),
+               max_size=200))
+def test_lint_source_never_crashes_on_parseable_text(text):
+    """lint_source on arbitrary parseable source returns diagnostics,
+    never raises (unparseable input may raise SyntaxError upstream)."""
+    try:
+        compile(text, "<gen>", "exec")
+    except (SyntaxError, ValueError):
+        return
+    lint_source(text)

@@ -6,6 +6,7 @@ of the serving tier is that coalesced dispatch happens asynchronously on
 size/deadline policy, and every result is still bit-identical to a
 standalone ``run_sweep`` of that tenant's specs.
 """
+import sys
 import threading
 
 import numpy as np
@@ -210,3 +211,67 @@ def test_concurrent_tenancy_stress(obj):
     per_tenant = svc.tenant_rows()
     assert len(per_tenant) == n_threads
     assert all(v == (2 * rounds, 2 * rounds) for v in per_tenant.values())
+
+
+# --------------------------------------------- stats locking (RL003 fixes)
+def test_flush_now_counter_survives_thread_races(obj):
+    """forced_flushes is bumped under _lock: N threads hammering
+    flush_now() concurrently must account every call exactly (the
+    pre-lock ``self.stats.forced_flushes += 1`` was a lost-update race
+    between HTTP handler threads and the drain path)."""
+    svc = SweepService(obj, epochs=1)
+    daemon = ServeDaemon(svc)          # not started: queue stays empty,
+    n_threads, calls = 8, 50           # flush_now() exercises only the
+    old = sys.getswitchinterval()      # counter + the (empty) dispatch
+    sys.setswitchinterval(1e-6)        # force frequent preemption
+    try:
+        threads = [threading.Thread(
+            target=lambda: [daemon.flush_now() for _ in range(calls)])
+            for _ in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    finally:
+        sys.setswitchinterval(old)
+    assert daemon.stats_snapshot().forced_flushes == n_threads * calls
+
+
+def test_stats_snapshot_is_a_decoupled_copy(obj):
+    """stats_snapshot() hands out a frozen-in-time COPY — later daemon
+    activity must not mutate an exporter's already-taken snapshot."""
+    svc = SweepService(obj, epochs=1)
+    daemon = ServeDaemon(svc)
+    before = daemon.stats_snapshot()
+    daemon.flush_now()
+    assert before.forced_flushes == 0
+    assert before is not daemon.stats
+    assert daemon.stats_snapshot().forced_flushes == 1
+
+
+def test_flush_error_surfaces_through_locked_snapshots(obj, monkeypatch):
+    """A poisoned dispatch lands in flush_errors/last_error under _lock,
+    is visible through the snapshot accessors (what metrics.snapshot now
+    reads), and a later healthy flush clears it."""
+    svc = SweepService(obj, epochs=1)
+    daemon = ServeDaemon(svc)
+    boom = RuntimeError("poisoned dispatch")
+
+    def failing_flush(selector=None):
+        raise boom
+
+    monkeypatch.setattr(svc, "flush", failing_flush)
+    assert daemon.flush_now() == []
+    assert daemon.last_error_snapshot() is boom
+    snap = daemon.stats_snapshot()
+    assert snap.flush_errors == 1 and snap.forced_flushes == 1
+
+    from repro.server.metrics import snapshot
+    exported = snapshot(svc, daemon=daemon)
+    assert "poisoned dispatch" in exported["daemon"]["last_error"]
+    assert exported["daemon"]["flush_errors"] == 1
+
+    monkeypatch.undo()                 # healthy flush clears the error
+    daemon.flush_now()
+    assert daemon.last_error_snapshot() is None
+    assert snapshot(svc, daemon=daemon)["daemon"]["last_error"] is None
