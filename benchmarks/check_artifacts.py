@@ -38,6 +38,10 @@ REQUIRED_KEYS: Dict[str, Tuple[str, ...]] = {
     "frontier_stability": (),
     "nonconvex_frontier": (),
     "fig1_convergence": (),
+    # obs-smoke lane: warm tracer-on vs tracer-off serving rounds plus the
+    # traced HTTP smoke (span chain + Prometheus scrape)
+    "obs_overhead": ("tracer_off_s", "tracer_on_s", "overhead_frac",
+                     "http_smoke"),
     # written by `python -m repro.analysis --json-out` in the repro-lint
     # CI lane; diagnostics must be [] for the lane to pass, but the
     # artifact records suppression counts for trend tooling either way

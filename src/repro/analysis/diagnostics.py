@@ -25,6 +25,9 @@ RULES: Dict[str, str] = {
              "must reach the group/runner cache keys",
     "RL005": "kernel purity: Pallas kernel bodies are effect-free (no "
              "print/env/callbacks; mode decisions live in kernels/dispatch)",
+    "RL006": "obs-boundary: no timing/tracing/metrics calls inside *_core "
+             "jitted scopes or kernel modules — observability brackets "
+             "compiled programs, it never runs inside them",
 }
 
 

@@ -5,6 +5,7 @@ from repro.analysis.rules import (  # noqa: F401
     rl003_locks,
     rl004_keys,
     rl005_kernel,
+    rl006_obs,
 )
 
 FILE_CHECKERS = (
@@ -12,6 +13,7 @@ FILE_CHECKERS = (
     rl002_trace.check,
     rl003_locks.check,
     rl005_kernel.check,
+    rl006_obs.check,
 )
 
 PROJECT_CHECKERS = (

@@ -103,6 +103,7 @@ from repro.core.asysvrg import (
 )
 from repro.core.hogwild import _hogwild_epochs_core, _resolve_hogwild_steps
 from repro.core.objective import Objective, get_objective, params_from_flat
+from repro.obs.trace import tracer as _tracer
 from repro.sharding.context import current_mesh
 
 ALGOS = ("asysvrg", "hogwild", "svrg")
@@ -162,6 +163,11 @@ class SweepSpec:
     The mode joins the group key, so fused and vmap rows never share a
     compiled runner — and their results are bit-identical in interpret
     mode, so flipping the flag never changes a row's numbers on CPU.
+    ``telemetry`` opts the row into `repro.obs.telemetry` series
+    (realized staleness, update norms) on its `SweepResult`. It is pure
+    reporting computed OUTSIDE the jitted group fn from already-returned
+    arrays, deliberately absent from the group key: flipping it can never
+    retrace, regroup, or change a single bit of the numeric outputs.
     """
     seed: int = 0
     scheme: str = "inconsistent"
@@ -176,6 +182,7 @@ class SweepSpec:
     epochs: int = 0
     objective: str = ""
     engine_mode: str = ""
+    telemetry: bool = False
 
     def to_config(self) -> SVRGConfig:
         return SVRGConfig(scheme=self.scheme, step_size=self.step_size,
@@ -191,6 +198,9 @@ class SweepResult(NamedTuple):
     ``histories``/``effective_passes`` have the GLOBAL max-epochs width;
     rows with a shorter budget are frozen past their own epoch count — use
     :meth:`curve` for a row trimmed to its own budget.
+    ``telemetry`` (a `repro.obs.telemetry.SweepTelemetry`, None unless a
+    spec opted in) carries realized-staleness / update-norm series derived
+    from the arrays above — extra reporting, never extra engine outputs.
     """
     specs: Tuple[SweepSpec, ...]
     histories: np.ndarray         # [C, max_epochs+1] loss after each epoch
@@ -199,6 +209,7 @@ class SweepResult(NamedTuple):
     total_updates: np.ndarray     # [C] updates applied over all row epochs
     epochs_per_row: np.ndarray    # [C] each row's executed epoch budget
     param_shapes: Tuple = ()      # objective's ((path, shape, dtype), ...)
+    telemetry: Optional[object] = None  # SweepTelemetry when a row opted in
 
     def curve(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
         """(effective_passes, loss history) trimmed to row c's own budget."""
@@ -641,7 +652,18 @@ def _dispatch_group(obj: Objective, specs: Sequence[SweepSpec],
         # pad the row axis to a multiple of the data-axis size; padded rows
         # replicate row 0 and are sliced off below
         args = _pad_rows(args, -len(members) % int(mesh.shape[_DATA_AXIS]))
-    w_fin, hist = runner(*obj.data_args(), *args)
+    # the execute span brackets the runner CALL (dispatch + any trace-time
+    # compile), never code inside the jit — RL006 enforces that boundary.
+    # Tag construction is gated so the tracer-off warm path pays only the
+    # enabled check; compiled=True lands via cache._counted's annotate.
+    tr = _tracer()
+    tags = {}
+    if tr.enabled:
+        from repro.kernels.dispatch import mode_tags
+        tags = dict(engine=engine, rows=len(members), total=int(total),
+                    group_epochs=int(group_epochs), **mode_tags(fused))
+    with tr.span_active("execute", **tags):
+        w_fin, hist = runner(*obj.data_args(), *args)
     return (np.asarray(hist)[:len(members)],
             np.asarray(w_fin)[:len(members)])
 
@@ -649,21 +671,32 @@ def _dispatch_group(obj: Objective, specs: Sequence[SweepSpec],
 def _assemble_result(specs: Tuple[SweepSpec, ...],
                      resolved: Sequence[_Resolved], histories: np.ndarray,
                      final_w: np.ndarray,
-                     param_shapes: Tuple = ()) -> SweepResult:
+                     param_shapes: Tuple = (), w_init=None) -> SweepResult:
     """Derive the accounting rows (passes, totals, epoch budgets) from the
     resolved specs and build the `SweepResult` — the ONE definition all
     dispatch paths (run_sweep, service demux, checkpointed jobs) share, so
-    accounting can never diverge between them."""
+    accounting can never diverge between them.
+
+    ``w_init`` (the flat start iterate) enables the opt-in telemetry
+    attachment: rows with ``SweepSpec.telemetry`` get realized-staleness /
+    update-norm series DERIVED from the already-final arrays here — after
+    every engine output is fixed, so the flag cannot perturb results."""
     epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
     passes = _accumulate_passes([r.passes_per_epoch for r in resolved],
                                 epochs_per_row, histories.shape[1] - 1)
     total_updates = epochs_per_row * np.asarray(
         [r.total for r in resolved], np.int64)
+    telemetry = None
+    if w_init is not None and any(s.telemetry for s in specs):
+        # lazy: repro.obs.telemetry imports back into repro.core
+        from repro.obs import telemetry as _telemetry
+        telemetry = _telemetry.compute(specs, resolved, histories, final_w,
+                                       w_init)
     return SweepResult(specs=specs, histories=histories,
                        effective_passes=passes, final_w=final_w,
                        total_updates=total_updates,
                        epochs_per_row=epochs_per_row,
-                       param_shapes=param_shapes)
+                       param_shapes=param_shapes, telemetry=telemetry)
 
 
 def run_sweep(obj: Optional[Objective], epochs: int,
@@ -702,4 +735,4 @@ def run_sweep(obj: Optional[Objective], epochs: int,
             final_w[c] = w_fin[row]
 
     return _assemble_result(specs, resolved, histories, final_w,
-                            param_shapes=obj.param_shapes())
+                            param_shapes=obj.param_shapes(), w_init=w_init)

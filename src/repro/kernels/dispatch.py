@@ -83,6 +83,20 @@ def fused_sweep_mode() -> str:
     return "compiled" if kernel_backend() == "tpu" else "interpret"
 
 
+def mode_tags(fused: bool) -> dict:
+    """Span tags describing HOW a group dispatch executes — stamped onto
+    the tracer's ``execute`` spans by `repro.core.sweep._dispatch_group`
+    so a trace answers "which lowering ran this request" without anyone
+    re-deriving the mode later (it can change with the environment). The
+    resolution mirrors `_fused_mode_key`: vmap bodies report the backend
+    only; fused bodies add the resolved megakernel mode."""
+    tags = {"engine_mode": "fused" if fused else "vmap",
+            "backend": kernel_backend()}
+    if fused:
+        tags["kernel_mode"] = fused_sweep_mode()
+    return tags
+
+
 def use_pallas(interpret: bool = False, force_kernel: bool = False) -> bool:
     """True when the Pallas kernel body should run (either mode)."""
     return kernel_mode(interpret, force_kernel) != "reference"

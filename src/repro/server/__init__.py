@@ -14,10 +14,13 @@ Four layers, all on the existing scheduler/cache stack (`repro.service`):
     tenant's huge grid cannot starve the queue.
   * `repro.server.http` / `repro.server.client` — stdlib-only HTTP
     front-end (`SweepServer`) and client (`SweepClient`): submit / result
-    (long-poll) / flush / stats / healthz, results bit-identical to
-    in-process ``run_sweep``.
+    (long-poll) / flush / stats / healthz (503 once the daemon heartbeat
+    stalls) / metrics (Prometheus 0.0.4) / trace (the `repro.obs` flight
+    recorder's span trees, ids echoed in ``X-Trace-Id``), results
+    bit-identical to in-process ``run_sweep``.
   * `repro.server.metrics` — one JSON snapshot: ServiceStats, queue depth,
-    per-tenant rows, p50/p95 flush + request latency, daemon counters.
+    per-tenant rows, p50/p95 flush + request latency, daemon counters +
+    heartbeat liveness.
 """
 from repro.server.client import ServerError, SweepClient
 from repro.server.daemon import (

@@ -83,6 +83,19 @@ class SweepClient:
     def stats(self) -> dict:
         return self._call("GET", "/stats")
 
+    def metrics(self) -> str:
+        """The raw Prometheus text exposition from ``GET /metrics``."""
+        req = urllib.request.Request(self.base_url + "/metrics")
+        with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+            return resp.read().decode()
+
+    def trace(self, trace_id: Optional[str] = None) -> dict:
+        """Flight-recorder state: recent traces + last-error dump, or one
+        request's full span tree when ``trace_id`` is given (KeyError once
+        it has been evicted from the ring buffer)."""
+        path = "/trace" if trace_id is None else f"/trace?id={trace_id}"
+        return self._call("GET", path)
+
     def submit(self, specs: Sequence[SweepSpec],
                epochs: Optional[int] = None, *, tenant: str = "default",
                priority: int = 0) -> int:

@@ -39,6 +39,7 @@ import bisect
 import dataclasses
 import tempfile
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.checkpoint import Checkpointer
@@ -60,12 +61,17 @@ class FlushPolicy:
     reused while pad rows ≤ (factor−1)× real rows, beyond that a new width
     is compiled and recorded. ``job_groups_per_slice`` — how many compiled
     groups one background-job turn may dispatch between flushes.
+    ``heartbeat_stall_s`` — how stale the flush thread's per-iteration
+    heartbeat may grow before ``/healthz`` reports the daemon STALLED
+    (503): must comfortably exceed one flush's dispatch time, since the
+    loop only stamps between turns.
     """
     max_rows: int = 64
     max_delay_ms: float = 50.0
     stable_widths: bool = True
     max_pad_factor: float = 2.0
     job_groups_per_slice: int = 1
+    heartbeat_stall_s: float = 30.0
 
     def __post_init__(self):
         if self.max_rows < 1:
@@ -79,6 +85,9 @@ class FlushPolicy:
         if self.job_groups_per_slice < 1:
             raise ValueError("job_groups_per_slice must be >= 1, got "
                              f"{self.job_groups_per_slice}")
+        if self.heartbeat_stall_s <= 0:
+            raise ValueError("heartbeat_stall_s must be > 0, got "
+                             f"{self.heartbeat_stall_s}")
 
 
 class WidthRegistry:
@@ -180,6 +189,9 @@ class ServeDaemon:
                         if policy.stable_widths else None)
         self._jobs: List[Tuple[JobHandle, Checkpointer, bool]] = []  # guarded-by: _lock
         self._next_job_id = 0  # guarded-by: _lock
+        # monotonic stamp the flush thread refreshes once per loop turn;
+        # /healthz compares its age against policy.heartbeat_stall_s
+        self._heartbeat: Optional[float] = None  # guarded-by: _lock
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._drain = True               # stop() overrides before _stop
@@ -195,6 +207,8 @@ class ServeDaemon:
         self.service.add_submit_listener(self._wake.set)
         self._drain = True
         self._stop.clear()
+        with self._lock:
+            self._heartbeat = time.monotonic()   # liveness from t=0
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="sweep-flush-daemon")
         self._thread.start()
@@ -276,6 +290,22 @@ class ServeDaemon:
         with self._lock:
             return self.last_error
 
+    def running(self) -> bool:
+        """True while the flush thread exists and is alive."""
+        thread = self._thread
+        return thread is not None and thread.is_alive()
+
+    def heartbeat_age_s(self) -> Optional[float]:
+        """Seconds since the flush thread last completed a loop turn (None
+        before the first ``start()``). The loop stamps at least every
+        ``_POLL_S`` while healthy; an age past
+        ``policy.heartbeat_stall_s`` means a flush is wedged inside XLA or
+        the thread died — ``/healthz`` turns 503 on either."""
+        with self._lock:
+            if self._heartbeat is None:
+                return None
+            return time.monotonic() - self._heartbeat
+
     # ------------------------------------------------------------ triggers
     def _flush_due(self) -> Optional[str]:
         """Which policy trigger (if any) says the queue should flush now."""
@@ -319,6 +349,8 @@ class ServeDaemon:
     # ------------------------------------------------------------ main loop
     def _run(self) -> None:
         while not self._stop.is_set():
+            with self._lock:
+                self._heartbeat = time.monotonic()
             err = self.last_error_snapshot()   # one coherent view per turn
             trigger = self._flush_due()
             if trigger is not None and err is None:

@@ -12,7 +12,16 @@ daemon below it are already thread-safe) exposing the serving tier:
                     poll cannot defeat coalescing)
     POST /flush     -> {"completed": [ids]}        (operator escape hatch)
     GET  /stats     -> repro.server.metrics.snapshot(...)
-    GET  /healthz   -> {"status": "ok", ...}
+    GET  /metrics   -> the same snapshot as Prometheus text exposition
+                    0.0.4, plus the service histograms (flush/request
+                    latency, rows-per-flush, pad-factor)
+    GET  /trace     -> flight-recorder state: recent traces + the retained
+                    last-error dump; ``?id=tNN`` returns one request's
+                    full span tree (404 once evicted). Submit/result
+                    responses echo the trace id in ``X-Trace-Id``.
+    GET  /healthz   -> {"status": "ok", ...}; 503 {"status": "stalled"}
+                    when the flush daemon's heartbeat is older than
+                    ``FlushPolicy.heartbeat_stall_s`` or its thread died
 
 Status mapping: bad input 400; unknown id 404; completed-but-evicted id
 410 (`ResultEvictedError` — re-submit or raise ``max_results``); result
@@ -37,6 +46,9 @@ from urllib.parse import parse_qs, urlparse
 import numpy as np
 
 from repro.core.sweep import SweepResult, SweepSpec
+from repro.obs import prometheus as _prometheus
+from repro.obs import telemetry as _obs_telemetry
+from repro.obs.trace import tracer as _tracer
 from repro.server import metrics as _metrics
 from repro.server.daemon import ServeDaemon
 from repro.server.fairness import FairShare
@@ -76,10 +88,13 @@ def result_to_dict(request_id: int, res: SweepResult) -> dict:
         "total_updates": res.total_updates.tolist(),
         "epochs_per_row": res.epochs_per_row.tolist(),
         "param_shapes": [list(entry) for entry in res.param_shapes],
+        "telemetry": (None if res.telemetry is None
+                      else _obs_telemetry.to_dict(res.telemetry)),
     }
 
 
 def result_from_dict(payload: dict) -> SweepResult:
+    telemetry = payload.get("telemetry")
     return SweepResult(
         specs=tuple(spec_from_dict(s) for s in payload["specs"]),
         histories=np.asarray(payload["histories"], np.float32),
@@ -88,7 +103,9 @@ def result_from_dict(payload: dict) -> SweepResult:
         total_updates=np.asarray(payload["total_updates"], np.int64),
         epochs_per_row=np.asarray(payload["epochs_per_row"], np.int64),
         param_shapes=tuple((path, tuple(shape), dtype) for path, shape, dtype
-                           in payload.get("param_shapes", ())))
+                           in payload.get("param_shapes", ())),
+        telemetry=(None if telemetry is None
+                   else _obs_telemetry.from_dict(telemetry)))
 
 
 # ---------------------------------------------------------------- handler
@@ -104,13 +121,24 @@ class _Handler(BaseHTTPRequestHandler):
     def svc(self) -> SweepService:
         return self.server.service
 
-    def _json(self, code: int, payload: dict) -> None:
+    def _json(self, code: int, payload: dict,
+              headers: Optional[dict] = None) -> None:
         body = json.dumps(payload).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for name, value in (headers or {}).items():
+            self.send_header(name, value)
         self.end_headers()
         self.wfile.write(body)
+
+    def _text(self, code: int, body: str, content_type: str) -> None:
+        data = body.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
 
     def _error(self, code: int, message: str, **extra) -> None:
         self._json(code, {"error": message, **extra})
@@ -130,14 +158,19 @@ class _Handler(BaseHTTPRequestHandler):
         m = _RESULT_PATH.match(url.path)
         try:
             if url.path == "/healthz":
-                self._json(200, {
-                    "status": "ok",
-                    "uptime_s": time.monotonic() - self.server.started_at,
-                    "pending_requests": self.svc.pending(),
-                    "daemon_running": self.server.daemon is not None})
+                self._get_healthz()
             elif url.path == "/stats":
                 self._json(200, _metrics.snapshot(
                     self.svc, self.server.daemon, self.server.fairness))
+            elif url.path == "/metrics":
+                body = _prometheus.render(
+                    _metrics.snapshot(self.svc, self.server.daemon,
+                                      self.server.fairness),
+                    histograms=self.svc.histograms.as_dict())
+                self._text(200, body,
+                           "text/plain; version=0.0.4; charset=utf-8")
+            elif url.path == "/trace":
+                self._get_trace(url.query)
             elif m:
                 self._get_result(int(m.group(1)), url.query)
             else:
@@ -147,6 +180,38 @@ class _Handler(BaseHTTPRequestHandler):
         except Exception as e:           # any other failure must still be
             self._safe_error(e)          # an HTTP answer, not a dropped
         #                                  socket the client can't map
+
+    def _get_healthz(self) -> None:
+        daemon = self.server.daemon
+        payload = {
+            "status": "ok",
+            "uptime_s": time.monotonic() - self.server.started_at,
+            "pending_requests": self.svc.pending(),
+            "daemon_running": daemon is not None and daemon.running(),
+        }
+        if daemon is None:           # eager-flush deployment: no liveness
+            return self._json(200, payload)   # to report beyond "we answered"
+        age = daemon.heartbeat_age_s()
+        payload["heartbeat_age_s"] = age
+        payload["heartbeat_stall_s"] = daemon.policy.heartbeat_stall_s
+        if (not daemon.running() or age is None
+                or age > daemon.policy.heartbeat_stall_s):
+            payload["status"] = "stalled"
+            return self._json(503, payload)
+        self._json(200, payload)
+
+    def _get_trace(self, query: str) -> None:
+        tr = _tracer()
+        ids = parse_qs(query).get("id")
+        if ids:
+            dump = tr.get(ids[0])
+            if dump is None:
+                return self._error(
+                    404, f"unknown trace id {ids[0]!r} (never minted, or "
+                    "evicted from the ring buffer)", status="unknown")
+            return self._json(200, dump)
+        self._json(200, {"enabled": tr.enabled, "recent": tr.recent(),
+                         "last_error": tr.last_error()})
 
     def _safe_error(self, e: Exception) -> None:
         try:
@@ -171,7 +236,9 @@ class _Handler(BaseHTTPRequestHandler):
         except KeyError:
             return self._error(404, f"unknown request id {rid}",
                                status="unknown")
-        self._json(200, result_to_dict(rid, res))
+        tid = self.svc.trace_id(rid)
+        self._json(200, result_to_dict(rid, res),
+                   {"X-Trace-Id": tid} if tid else None)
 
     def do_POST(self) -> None:         # noqa: N802 (stdlib handler API)
         url = urlparse(self.path)
@@ -210,7 +277,9 @@ class _Handler(BaseHTTPRequestHandler):
         rid = self.svc.submit(
             specs, epochs, tenant=str(payload.get("tenant", "default")),
             priority=int(payload.get("priority", 0)))
-        self._json(200, {"request_id": rid})
+        tid = self.svc.trace_id(rid)
+        self._json(200, {"request_id": rid, "trace_id": tid},
+                   {"X-Trace-Id": tid} if tid else None)
 
 
 # ----------------------------------------------------------------- server

@@ -67,6 +67,8 @@ def snapshot(service: SweepService, daemon: Optional[ServeDaemon] = None,
         out["daemon"] = {**dataclasses.asdict(daemon.stats_snapshot()),
                          "jobs_pending": daemon.jobs_pending(),
                          "policy": dataclasses.asdict(daemon.policy),
+                         "running": daemon.running(),
+                         "heartbeat_age_s": daemon.heartbeat_age_s(),
                          "last_error": repr(err) if err else None}
     if fairness is not None:
         out["fairness"] = {

@@ -48,6 +48,8 @@ from repro.core.sweep import (
     _write_row_history,
     plan_sweep,
 )
+from repro.obs.metrics import ServiceHistograms
+from repro.obs.trace import tracer as _tracer
 from repro.service import cache as _cache
 from repro.service.scheduler import (FlushSelector, SweepRequest,
                                      WidthPolicy, coalesce, dispatch)
@@ -165,6 +167,12 @@ class SweepService:
         # them; the metrics layer derives p50/p95 from these
         self._flush_latencies: deque = deque(maxlen=latency_window)  # guarded-by: _lock
         self._request_latencies: deque = deque(maxlen=latency_window)  # guarded-by: _lock
+        # request id -> flight-recorder trace id (empty entries are never
+        # stored); bounded like the results store so a long-lived server
+        # can't accumulate ids forever. The histograms self-lock, so
+        # observes happen wherever is convenient.
+        self._trace_ids: "OrderedDict[int, str]" = OrderedDict()  # guarded-by: _lock
+        self.histograms = ServiceHistograms()
 
     # ---------------------------------------------------------------- queue
     def submit(self, specs: Sequence[SweepSpec],
@@ -189,21 +197,30 @@ class SweepService:
         if not specs:
             raise ValueError("empty request")
         default = epochs if epochs is not None else self.default_epochs
-        plan_sweep(self.obj, default, specs)     # raises on any bad spec
-        with self._lock:
-            rid = self._next_id
-            self._next_id += 1
-            self._pending.append(SweepRequest(
-                request_id=rid, specs=specs, epochs=default,
-                tenant=str(tenant), priority=int(priority),
-                submitted_at=time.monotonic()))
-            self._requests_submitted += 1
-            self._rows_submitted += len(specs)
-            rows = self._tenant_rows.setdefault(str(tenant), [0, 0])
-            rows[0] += len(specs)
-            while len(self._tenant_rows) > self._max_tenants:
-                self._tenant_rows.popitem(last=False)
-            listeners = tuple(self._submit_listeners)
+        tr = _tracer()
+        tid = tr.new_trace()
+        with tr.span(tid, "submit", rows=len(specs), tenant=str(tenant)):
+            with tr.span(tid, "plan", parent_name="submit"):
+                plan_sweep(self.obj, default, specs)  # raises on bad spec
+            with self._lock:
+                rid = self._next_id
+                self._next_id += 1
+                self._pending.append(SweepRequest(
+                    request_id=rid, specs=specs, epochs=default,
+                    tenant=str(tenant), priority=int(priority),
+                    submitted_at=time.monotonic(), trace_id=tid))
+                if tid:
+                    self._trace_ids[rid] = tid
+                    while len(self._trace_ids) > self._max_results:
+                        self._trace_ids.popitem(last=False)
+                self._requests_submitted += 1
+                self._rows_submitted += len(specs)
+                rows = self._tenant_rows.setdefault(str(tenant), [0, 0])
+                rows[0] += len(specs)
+                while len(self._tenant_rows) > self._max_tenants:
+                    self._tenant_rows.popitem(last=False)
+                listeners = tuple(self._submit_listeners)
+            tr.annotate(request_id=rid)
         for cb in listeners:                     # outside the lock: a
             cb()                                 # listener may touch us
         return rid
@@ -248,15 +265,21 @@ class SweepService:
             self._inflight.update(r.request_id for r in pending)
         if not pending:
             return []
-        batch = coalesce(self.obj, tuple(pending))
+        tr = _tracer()
+        tids = tuple(r.trace_id for r in pending) if tr.enabled else ()
         t0 = time.perf_counter()
         try:
+            with tr.span_all(tids, "coalesce", parent_name="submit",
+                             requests=len(pending)):
+                batch = coalesce(self.obj, tuple(pending))
             with _cache.scoped_counters(self._cache_sink):
                 results, info = dispatch(self.obj, batch, w0=self.w0,
                                          drop_prob=self.drop_prob,
                                          mesh=_active_mesh(self.mesh),
                                          width_policy=self.width_policy)
-        except Exception:
+        except Exception as exc:
+            for r in pending:
+                tr.record_error(r.trace_id, exc)
             with self._lock:
                 self._pending = pending + self._pending
                 self._inflight.difference_update(
@@ -264,6 +287,13 @@ class SweepService:
                 self._done_cv.notify_all()
             raise
         now = time.monotonic()
+        dt = time.perf_counter() - t0
+        self.histograms.flush_latency_seconds.observe(dt)
+        self.histograms.rows_per_flush.observe(info.rows_dispatched)
+        if info.rows_dispatched:
+            self.histograms.pad_factor.observe(
+                (info.rows_dispatched + info.rows_padded)
+                / info.rows_dispatched)
         with self._lock:
             self._results.update(results)
             # evict oldest first, but never a result a thread is blocked
@@ -281,12 +311,14 @@ class SweepService:
             self._groups_merged += info.groups_merged
             self._rows_padded += info.rows_padded
             self._flushes += 1
-            self._flush_latencies.append(time.perf_counter() - t0)
+            self._flush_latencies.append(dt)
             for req in pending:
                 self._tenant_rows.setdefault(req.tenant, [0, 0])[1] += \
                     req.rows
                 if req.submitted_at:
-                    self._request_latencies.append(now - req.submitted_at)
+                    latency = now - req.submitted_at
+                    self._request_latencies.append(latency)
+                    self.histograms.request_latency_seconds.observe(latency)
             self._done_cv.notify_all()
         return sorted(results)
 
@@ -323,20 +355,23 @@ class SweepService:
         and WAITS if another thread's flush has the request in flight.
         Raises `ResultEvictedError` for completed-then-released ids and
         bare KeyError for ids that never existed."""
+        tr = _tracer()
         self._watch(request_id)
         try:
-            while True:
-                with self._done_cv:            # shares the service lock
-                    if request_id in self._results:
-                        return self._results[request_id]
-                    if request_id in self._inflight:
-                        self._done_cv.wait()
-                        continue
-                    queued = any(r.request_id == request_id
-                                 for r in self._pending)
-                    if not queued:
-                        raise self._missing(request_id)
-                self.flush()
+            with tr.span(self.trace_id(request_id), "result",
+                         parent_name="submit"):
+                while True:
+                    with self._done_cv:        # shares the service lock
+                        if request_id in self._results:
+                            return self._results[request_id]
+                        if request_id in self._inflight:
+                            self._done_cv.wait()
+                            continue
+                        queued = any(r.request_id == request_id
+                                     for r in self._pending)
+                        if not queued:
+                            raise self._missing(request_id)
+                    self.flush()
         finally:
             self._unwatch(request_id)
 
@@ -348,23 +383,27 @@ class SweepService:
         result path uses this so a result poll can't defeat coalescing.
         Raises TimeoutError if the deadline passes first."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        tr = _tracer()
         self._watch(request_id)
         try:
-            with self._done_cv:
-                while True:
-                    if request_id in self._results:
-                        return self._results[request_id]
-                    if (request_id not in self._inflight
-                            and not any(r.request_id == request_id
-                                        for r in self._pending)):
-                        raise self._missing(request_id)
-                    remaining = (None if deadline is None
-                                 else deadline - time.monotonic())
-                    if remaining is not None and remaining <= 0:
-                        raise TimeoutError(
-                            f"request {request_id} not completed within "
-                            f"{timeout}s (still queued or in flight)")
-                    self._done_cv.wait(remaining)
+            with tr.span(self.trace_id(request_id), "result",
+                         parent_name="submit"):
+                with self._done_cv:
+                    while True:
+                        if request_id in self._results:
+                            return self._results[request_id]
+                        if (request_id not in self._inflight
+                                and not any(r.request_id == request_id
+                                            for r in self._pending)):
+                            raise self._missing(request_id)
+                        remaining = (None if deadline is None
+                                     else deadline - time.monotonic())
+                        if remaining is not None and remaining <= 0:
+                            raise TimeoutError(
+                                f"request {request_id} not completed "
+                                f"within {timeout}s (still queued or in "
+                                "flight)")
+                        self._done_cv.wait(remaining)
         finally:
             self._unwatch(request_id)
 
@@ -398,6 +437,14 @@ class SweepService:
             if not stamps:
                 return None
             return time.monotonic() - min(stamps)
+
+    def trace_id(self, request_id: int) -> str:
+        """The flight-recorder trace id :meth:`submit` minted for a
+        request ("" when tracing was off at submit, or the id aged out of
+        the bounded map). The serving tier echoes this in response
+        headers so a client can fetch the span tree from ``/trace``."""
+        with self._lock:
+            return self._trace_ids.get(request_id, "")
 
     def tenant_rows(self) -> Dict[str, Tuple[int, int]]:
         """Per-tenant (rows submitted, rows completed) snapshot."""
@@ -527,4 +574,5 @@ class SweepService:
                                          "groups_total": len(group_items)})
         return _assemble_result(plan.specs, resolved, state["histories"],
                                 state["final_w"],
-                                param_shapes=job_obj.param_shapes()), True
+                                param_shapes=job_obj.param_shapes(),
+                                w_init=w_init), True

@@ -41,6 +41,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import sweep as _sweep
+from repro.obs.trace import tracer as _tracer
 from repro.sharding.context import mesh_fingerprint
 
 
@@ -156,6 +157,10 @@ def _counted(fn):
     def traced(*args):
         with _LOCK:
             _credit("compiles")
+        # trace-time host Python on the dispatching thread: the open
+        # dispatch/execute span group (if any) gets the attribution; the
+        # tracer's lock is a leaf, so holding no cache lock here matters
+        _tracer().annotate(compiled=True)
         return fn(*args)
     return traced
 
@@ -183,9 +188,11 @@ def get_group_runner(engine: str, *, group_epochs: int, total: int,
         runner = _RUNNERS.get(key)
         if runner is not None:
             _credit("hits")
+            _tracer().annotate(cache="hit")
             _RUNNERS.move_to_end(key)            # LRU touch
             return runner
         _credit("misses")
+        _tracer().annotate(cache="miss")
         fn, num_row = _sweep._group_fn(engine, obj=obj, num_data=num_data,
                                        epochs=group_epochs,
                                        total=total, buf_len=buf_len,

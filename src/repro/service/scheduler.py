@@ -50,6 +50,7 @@ from repro.core.sweep import (
     _write_row_history,
     plan_sweep,
 )
+from repro.obs.trace import tracer as _tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,13 +62,17 @@ class SweepRequest:
     fair-share selector (`repro.server.fairness`) slices flushes by them;
     the numeric path below ignores both. ``submitted_at`` is the
     `time.monotonic()` admission stamp the background flush daemon's
-    deadline policy and the latency metrics read."""
+    deadline policy and the latency metrics read. ``trace_id`` is the
+    flight-recorder id `SweepService.submit` minted (empty when tracing
+    is off); the dispatch path threads it through so pad/dispatch/demux
+    spans land in every owning request's trace."""
     request_id: int
     specs: Tuple[SweepSpec, ...]
     epochs: int
     tenant: str = "default"
     priority: int = 0
     submitted_at: float = 0.0
+    trace_id: str = ""
 
     @property
     def rows(self) -> int:
@@ -177,6 +182,18 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
     specs, resolved = batch.specs, batch.resolved
     w_inits = {ofp: (o.init_flat() if w0 is None else o.as_flat(w0))
                for ofp, o in batch.objectives.items()}
+    offsets = [rp.offset for rp in batch.request_plans]
+
+    tr = _tracer()
+
+    def _member_tids(members: Sequence[int]) -> Tuple[str, ...]:
+        """The owning requests' trace ids for a group's flat row indices
+        (deduped by span_all; all-empty when tracing is off)."""
+        if not tr.enabled:
+            return ()
+        return tuple(
+            batch.request_plans[bisect.bisect_right(offsets, c) - 1]
+            .request.trace_id for c in members)
 
     # per-request output buffers at the REQUEST's own history width (its
     # rows' max epoch budget) and ITS objective's flat dim, exactly like a
@@ -189,26 +206,32 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
                         np.zeros((len(rp.plan.specs),
                                   rp.plan.objective.flat_dim), np.float32),
                         e_rows))
-    offsets = [rp.offset for rp in batch.request_plans]
 
     rows_coalesced = 0
     groups_merged = 0
     rows_padded = 0
     for key_, members in batch.groups.items():
+        member_tids = _member_tids(members)
         group_epochs = batch.group_epochs(key_)
         run_members = members
         if width_policy is not None:
-            width = int(width_policy(key_, group_epochs, len(members)))
-            if width < len(members):
-                raise ValueError(
-                    f"width policy shrank group {key_}: {width} < "
-                    f"{len(members)} real rows")
-            run_members = members + [members[0]] * (width - len(members))
-            rows_padded += width - len(members)
+            with tr.span_all(member_tids, "pad", parent_name="coalesce"):
+                width = int(width_policy(key_, group_epochs, len(members)))
+                if width < len(members):
+                    raise ValueError(
+                        f"width policy shrank group {key_}: {width} < "
+                        f"{len(members)} real rows")
+                run_members = (members
+                               + [members[0]] * (width - len(members)))
+                rows_padded += width - len(members)
+                tr.annotate(natural=len(members), padded=len(run_members))
         group_obj = batch.objectives[key_[0]]
-        hist, w_fin = _dispatch_group(group_obj, specs, resolved,
-                                      run_members, key_, group_epochs,
-                                      w_inits[key_[0]], drop_prob, mesh)
+        with tr.span_all(member_tids, "dispatch", parent_name="coalesce",
+                         group_rows=len(run_members),
+                         group_epochs=int(group_epochs)):
+            hist, w_fin = _dispatch_group(group_obj, specs, resolved,
+                                          run_members, key_, group_epochs,
+                                          w_inits[key_[0]], drop_prob, mesh)
         hist, w_fin = hist[:len(members)], w_fin[:len(members)]
         owners = {bisect.bisect_right(offsets, c) - 1 for c in members}
         if len(owners) > 1:
@@ -224,10 +247,14 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
             finals[local] = w_fin[row]
 
     results: Dict[int, SweepResult] = {}
-    for rp, (hists, finals, _) in zip(batch.request_plans, buffers):
-        results[rp.request.request_id] = _assemble_result(
-            rp.plan.specs, rp.plan.resolved, hists, finals,
-            param_shapes=rp.plan.objective.param_shapes())
+    all_tids = tuple(rp.request.trace_id for rp in batch.request_plans) \
+        if tr.enabled else ()
+    with tr.span_all(all_tids, "demux", parent_name="coalesce"):
+        for rp, (hists, finals, _) in zip(batch.request_plans, buffers):
+            results[rp.request.request_id] = _assemble_result(
+                rp.plan.specs, rp.plan.resolved, hists, finals,
+                param_shapes=rp.plan.objective.param_shapes(),
+                w_init=w_inits[rp.plan.objective.fingerprint()])
 
     info = DispatchInfo(groups_dispatched=len(batch.groups),
                         rows_dispatched=len(specs),

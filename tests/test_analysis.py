@@ -291,6 +291,59 @@ def test_rl005_flags_impurity_in_kernel_module_only():
     assert lint_source(KERNEL_IMPURE, path="src/repro/core/helper.py") == []
 
 
+# --------------------------------------------------------------------- RL006
+BAD_RL006_CORE = """\
+import time
+
+def epoch_core(w, key):
+    t0 = time.perf_counter()
+    tr = tracer()
+    tr.annotate(started=t0)
+    return w
+"""
+
+BAD_RL006_KERNEL = """\
+import time
+
+def sweep_body(w_ref, o_ref):
+    t0 = time.monotonic_ns()
+    hist.observe(t0)
+    o_ref[...] = w_ref[...]
+"""
+
+GOOD_RL006_BRACKETS = """\
+import time
+
+def dispatch_group(runner, args):
+    t0 = time.perf_counter()
+    with tracer().span_active("execute"):
+        out = runner(*args)
+    hist.observe(time.perf_counter() - t0)
+    return out
+"""
+
+
+def test_rl006_flags_obs_calls_inside_core_scopes():
+    diags = lint_source(BAD_RL006_CORE)
+    assert codes(diags) == ["RL006", "RL006", "RL006"]
+    assert [d.line for d in diags] == [4, 5, 6]
+    assert "bracket the compiled program" in diags[0].message
+
+
+def test_rl006_flags_kernel_modules_wholesale():
+    diags = lint_source(BAD_RL006_KERNEL,
+                        path="src/repro/kernels/sweep/kernel.py")
+    assert codes(diags) == ["RL006", "RL006"]
+    # the same code outside kernels/**/kernel.py and outside *_core scopes
+    # is exactly where obs calls belong
+    assert lint_source(BAD_RL006_KERNEL,
+                       path="src/repro/core/helper.py") == []
+
+
+def test_rl006_allows_observability_at_the_dispatch_site():
+    assert lint_source(GOOD_RL006_BRACKETS) == []
+
+
 # --------------------------------------------------------- suppression (RL000)
 def test_suppression_with_reason_silences_finding():
     src = BAD_RL001_AXISLESS.replace(
