@@ -15,10 +15,17 @@ Two phases, both on a warm runner cache (the regime servers live in):
     ``(on - off) / off <= 5%``. The disabled path is a single bool check,
     and the enabled path only brackets host-side stages — neither may show
     up against the compiled program's runtime.
+  * FEATURES — per-feature attribution on one all-off baseline service:
+    each round flips exactly one of tracer / histograms / progress /
+    telemetry on and prices its warm delta against the all-off round.
+    Acceptance: the live-progress bus (the PR-10 feature that recomputes
+    per-row losses and publishes slice events) stays ``<= 5%`` over the
+    all-off baseline with zero recompiles — enabling it must never reach
+    a group key.
 
 Writes ``BENCH_obs_overhead.json`` (keys: ``tracer_off_s``,
-``tracer_on_s``, ``overhead_frac``, ``http_smoke``); ``--quick`` is the
-CI `obs-smoke` configuration.
+``tracer_on_s``, ``overhead_frac``, ``http_smoke``, ``features``);
+``--quick`` is the CI `obs-smoke` configuration.
 """
 from __future__ import annotations
 
@@ -31,12 +38,17 @@ import urllib.request
 from benchmarks.artifacts import write_bench_json
 from repro.core import LogisticRegression, SweepSpec
 from repro.data.libsvm import make_synthetic_libsvm
+from repro.obs.progress import disable_progress, enable_progress
 from repro.obs.trace import disable_tracing, enable_tracing
 from repro.server import FlushPolicy, SweepClient, SweepServer
 from repro.service import SweepService, cache_stats
 
 ACCEPT_OVERHEAD_FRAC = 0.05
 ROWS_PER_REQUEST = 4
+# the switchable obs features, each priced in isolation against all-off
+# ("telemetry" rides the SweepSpec flag, the others are process/service
+# toggles — see _set_features)
+FEATURES = ("tracer", "histograms", "progress", "telemetry")
 
 # every line of a 0.0.4 text exposition: comment, blank, or sample
 _PROM_LINE = re.compile(
@@ -48,9 +60,11 @@ _EXPECTED_SPANS = {"submit", "plan", "coalesce", "pad", "dispatch",
                    "execute", "demux"}
 
 
-def _specs(base_seed: int, rows: int = ROWS_PER_REQUEST):
+def _specs(base_seed: int, rows: int = ROWS_PER_REQUEST,
+           telemetry: bool = False):
     return [SweepSpec(scheme="inconsistent", step_size=0.5, tau=3,
-                      num_threads=4, inner_steps=25, seed=base_seed + c)
+                      num_threads=4, inner_steps=25, seed=base_seed + c,
+                      telemetry=telemetry)
             for c in range(rows)]
 
 
@@ -113,10 +127,12 @@ def http_smoke(obj, epochs: int) -> dict:
         disable_tracing(clear=True)
 
 
-def _round(svc, base_seed: int, submits: int) -> float:
+def _round(svc, base_seed: int, submits: int,
+           telemetry: bool = False) -> float:
     """One warm closed-loop round: N submits, one flush, all results."""
     t0 = time.perf_counter()
-    rids = [svc.submit(_specs(base_seed + 1000 * i)) for i in range(submits)]
+    rids = [svc.submit(_specs(base_seed + 1000 * i, telemetry=telemetry))
+            for i in range(submits)]
     svc.flush()
     for rid in rids:
         svc.result(rid)
@@ -158,6 +174,68 @@ def measure_overhead(obj, epochs: int, rounds: int, submits: int) -> dict:
     }
 
 
+def _set_features(svc, enabled: frozenset) -> None:
+    """Flip the process/service obs toggles to exactly ``enabled``
+    ("telemetry" is per-spec, handled by the round itself)."""
+    if "tracer" in enabled:
+        enable_tracing()
+    else:
+        disable_tracing(clear=True)
+    if "progress" in enabled:
+        enable_progress()
+    else:
+        disable_progress(clear=True)
+    svc.histograms.enabled = "histograms" in enabled
+
+
+def measure_features(obj, epochs: int, rounds: int, submits: int) -> dict:
+    """Per-feature warm deltas: one all-off baseline round per iteration,
+    then one round per feature with exactly that feature on, interleaved
+    so drift hits every mode equally. Min-of-rounds throughout."""
+    svc = SweepService(obj, epochs=epochs, max_results=4 * submits)
+    _set_features(svc, frozenset())
+    _round(svc, base_seed=1, submits=submits)            # compile + warm
+    _round(svc, base_seed=1, submits=submits, telemetry=True)  # warm too
+    base = cache_stats()
+
+    baseline = []
+    rounds_by_feature = {f: [] for f in FEATURES}
+    try:
+        for r in range(rounds):
+            _set_features(svc, frozenset())
+            baseline.append(_round(svc, 30_000 + 971 * r, submits))
+            for i, feat in enumerate(FEATURES):
+                _set_features(svc, frozenset((feat,)))
+                rounds_by_feature[feat].append(_round(
+                    svc, 40_000 + 971 * r + 7 * i, submits,
+                    telemetry=(feat == "telemetry")))
+    finally:
+        _set_features(svc, frozenset())
+        svc.histograms.enabled = True        # restore the service default
+
+    compiles = cache_stats().since(base).compiles
+    if compiles:
+        raise AssertionError(
+            f"feature rounds recompiled ({compiles} traces) — obs toggles "
+            "must never reach a group key")
+    base_s = min(baseline)
+    features = {
+        feat: {
+            "round_s": min(series),
+            "delta_frac": (min(series) - base_s) / base_s,
+        }
+        for feat, series in rounds_by_feature.items()
+    }
+    progress_frac = features["progress"]["delta_frac"]
+    if progress_frac > ACCEPT_OVERHEAD_FRAC:
+        raise AssertionError(
+            f"progress-bus warm rounds {progress_frac * 100:.1f}% slower "
+            f"than all-off (acceptance: <= "
+            f"{ACCEPT_OVERHEAD_FRAC * 100:.0f}%)")
+    return {"baseline_s": base_s, "baseline_rounds_s": baseline,
+            "compiles_measured": compiles, **features}
+
+
 def run(quick: bool = False):
     ds = make_synthetic_libsvm("real-sim", seed=11,
                                scale=0.002 if quick else 0.01)
@@ -168,8 +246,10 @@ def run(quick: bool = False):
 
     smoke = http_smoke(obj, epochs)
     bench = measure_overhead(obj, epochs, rounds, submits)
+    features = measure_features(obj, epochs, rounds, submits)
 
-    out = {"dataset": "real-sim", "epochs": epochs, "http_smoke": smoke}
+    out = {"dataset": "real-sim", "epochs": epochs, "http_smoke": smoke,
+           "features": features}
     out.update(bench)
     # acceptance: the flight recorder may not tax the warm serving path
     # by more than 5% — its spans bracket host-side stages only
@@ -192,6 +272,10 @@ def main(quick: bool = True):
           f"compiles={out['compiles_measured']}")
     print(f"obs_http_smoke,0,spans={'+'.join(out['http_smoke']['spans'])};"
           f"metrics_lines={out['http_smoke']['metrics_lines']}")
+    for feat in FEATURES:
+        entry = out["features"][feat]
+        print(f"obs_feature_{feat},{entry['round_s'] * 1e6:.0f},"
+              f"delta_frac={entry['delta_frac']:.4f}")
 
 
 if __name__ == "__main__":

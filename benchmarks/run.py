@@ -14,9 +14,10 @@ def main() -> None:
     quick = "--full" not in sys.argv
     from benchmarks import (fig1_convergence, fig1_speedup,
                             frontier_stability, kernel_sweep,
-                            nonconvex_frontier, roofline_report,
-                            server_latency, service_throughput,
-                            table2_schemes, table3_vs_hogwild)
+                            nonconvex_frontier, progress_ledger,
+                            roofline_report, server_latency,
+                            service_throughput, table2_schemes,
+                            table3_vs_hogwild)
     table2_schemes.main(quick=quick)
     kernel_sweep.main(quick=quick)
     table3_vs_hogwild.main(quick=quick)
@@ -24,6 +25,7 @@ def main() -> None:
     nonconvex_frontier.main(quick=quick)
     service_throughput.main(quick=quick)
     server_latency.main(quick=quick)
+    progress_ledger.main(quick=quick)
     fig1_speedup.main(quick=quick)
     fig1_convergence.main(quick=quick)
     roofline_report.main(quick=quick)

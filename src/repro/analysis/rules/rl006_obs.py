@@ -19,6 +19,14 @@ jit-traced numeric bodies, nested functions included) and anywhere in a
     and any ``.span`` / ``.span_all`` / ``.span_active`` / ``.annotate``
     / ``.new_trace`` / ``.record_error`` method call;
   * histogram recording: any ``.observe(...)`` call;
+  * the live-progress bus: ``progress_bus`` / ``ProgressBus`` /
+    ``enable_progress`` / ``disable_progress`` and ``.publish`` /
+    ``.watch`` method calls;
+  * the divergence watchdog: ``Watchdog`` / ``enforce_group`` /
+    ``first_bad_epoch`` (host-side numpy inspection by contract);
+  * the performance ledger: ``ledger`` / ``enable_ledger`` /
+    ``disable_ledger`` / ``note_compile`` and ``.record_dispatch``
+    method calls;
   * any reference into ``repro.obs`` (aliased module access included).
 
 Fix: move the measurement to the call site that dispatches the jitted
@@ -41,8 +49,16 @@ _TIMING_CALLS = {
     for suffix in ("", "_ns")
 }
 _TRACER_CALLS = {"tracer", "enable_tracing", "disable_tracing"}
+# live-obs entry points (PR 10): progress bus, watchdog, perf ledger —
+# all host-side by contract, so any call inside a jitted scope is a bug
+_PROGRESS_CALLS = {"progress_bus", "ProgressBus", "enable_progress",
+                   "disable_progress"}
+_WATCHDOG_CALLS = {"Watchdog", "enforce_group", "first_bad_epoch"}
+_LEDGER_CALLS = {"ledger", "enable_ledger", "disable_ledger",
+                 "note_compile"}
 _OBS_METHODS = {"span", "span_all", "span_active", "annotate", "new_trace",
-                "record_error", "observe"}
+                "record_error", "observe", "publish", "watch",
+                "record_dispatch"}
 
 
 def _kernel_module(path: str) -> bool:
@@ -58,6 +74,12 @@ def _why(node: ast.Call) -> str:
     last = name.rsplit(".", 1)[-1]
     if last in _TRACER_CALLS:
         return f"tracer API call `{name}(...)`"
+    if last in _PROGRESS_CALLS:
+        return f"progress-bus call `{name}(...)`"
+    if last in _WATCHDOG_CALLS:
+        return f"watchdog call `{name}(...)`"
+    if last in _LEDGER_CALLS:
+        return f"ledger call `{name}(...)`"
     if "." in name and last in _OBS_METHODS:
         return f"obs recording call `{name}(...)`"
     return ""

@@ -84,6 +84,7 @@ many clients' specs through the same runners.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -103,6 +104,7 @@ from repro.core.asysvrg import (
 )
 from repro.core.hogwild import _hogwild_epochs_core, _resolve_hogwild_steps
 from repro.core.objective import Objective, get_objective, params_from_flat
+from repro.obs import ledger as _ledger
 from repro.obs.trace import tracer as _tracer
 from repro.sharding.context import current_mesh
 
@@ -201,6 +203,10 @@ class SweepResult(NamedTuple):
     ``telemetry`` (a `repro.obs.telemetry.SweepTelemetry`, None unless a
     spec opted in) carries realized-staleness / update-norm series derived
     from the arrays above — extra reporting, never extra engine outputs.
+    ``diverged_rows`` (None unless a watchdog ran and flagged something)
+    holds, per row, -1 for healthy or the last trusted epoch for a row the
+    `repro.obs.watchdog` detected diverging; under ``cancel_row`` that is
+    also the epoch the row was frozen at (``epochs_per_row`` reflects it).
     """
     specs: Tuple[SweepSpec, ...]
     histories: np.ndarray         # [C, max_epochs+1] loss after each epoch
@@ -210,6 +216,7 @@ class SweepResult(NamedTuple):
     epochs_per_row: np.ndarray    # [C] each row's executed epoch budget
     param_shapes: Tuple = ()      # objective's ((path, shape, dtype), ...)
     telemetry: Optional[object] = None  # SweepTelemetry when a row opted in
+    diverged_rows: Optional[np.ndarray] = None  # [C] -1 or last trusted epoch
 
     def curve(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
         """(effective_passes, loss history) trimmed to row c's own budget."""
@@ -662,16 +669,50 @@ def _dispatch_group(obj: Objective, specs: Sequence[SweepSpec],
         from repro.kernels.dispatch import mode_tags
         tags = dict(engine=engine, rows=len(members), total=int(total),
                     group_epochs=int(group_epochs), **mode_tags(fused))
+    # The performance ledger (opt-in, one-bool check) times the same
+    # bracket the execute span does — wall clock around the runner CALL,
+    # host-side, never inside the compiled body (RL006).
+    led_on = _ledger.ledger_enabled()
+    t0 = time.perf_counter() if led_on else 0.0
     with tr.span_active("execute", **tags):
         w_fin, hist = runner(*obj.data_args(), *args)
+    if led_on:
+        call_args = (*obj.data_args(), *args)
+        _ledger.ledger().record_dispatch(
+            key=key_, rows=int(args[-1].shape[0]), dim=int(w_init.shape[0]),
+            epochs=int(group_epochs), wall_s=time.perf_counter() - t0,
+            cost_fn=lambda: _aot_cost_analysis(runner, call_args))
     return (np.asarray(hist)[:len(members)],
             np.asarray(w_fin)[:len(members)])
+
+
+def _aot_cost_analysis(runner, call_args):
+    """XLA's own FLOPs/bytes estimate for one cached group runner, via the
+    AOT path. The re-trace this forces is bookkeeping, not a user-visible
+    (re)compile — `uncounted_trace` keeps it out of the compile counters
+    the warm-path contracts (0 recompiles) are pinned on."""
+    from repro.service.cache import uncounted_trace
+
+    with uncounted_trace():
+        cost = runner.lower(*call_args).compile().cost_analysis()
+    # jax returns either one dict or a per-device list of dicts
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost
+
+
+def group_label(key_: _GroupKey) -> str:
+    """Human-readable label for one compiled group (progress/ledger ids)."""
+    _, engine, total, option, buf_len, fused = key_
+    return (f"{engine}-{'fused' if fused else 'vmap'}-M{int(total)}"
+            f"-opt{option}-buf{int(buf_len)}")
 
 
 def _assemble_result(specs: Tuple[SweepSpec, ...],
                      resolved: Sequence[_Resolved], histories: np.ndarray,
                      final_w: np.ndarray,
-                     param_shapes: Tuple = (), w_init=None) -> SweepResult:
+                     param_shapes: Tuple = (), w_init=None,
+                     diverged: Optional[Dict[int, int]] = None) -> SweepResult:
     """Derive the accounting rows (passes, totals, epoch budgets) from the
     resolved specs and build the `SweepResult` — the ONE definition all
     dispatch paths (run_sweep, service demux, checkpointed jobs) share, so
@@ -680,7 +721,12 @@ def _assemble_result(specs: Tuple[SweepSpec, ...],
     ``w_init`` (the flat start iterate) enables the opt-in telemetry
     attachment: rows with ``SweepSpec.telemetry`` get realized-staleness /
     update-norm series DERIVED from the already-final arrays here — after
-    every engine output is fixed, so the flag cannot perturb results."""
+    every engine output is fixed, so the flag cannot perturb results.
+
+    ``diverged`` (flat row -> last trusted epoch, from the watchdog)
+    becomes the optional ``diverged_rows`` marker array; callers passing
+    it hand in ``resolved`` rows whose epoch budgets already reflect any
+    ``cancel_row`` truncation, so the accounting below follows for free."""
     epochs_per_row = np.asarray([r.epochs for r in resolved], np.int64)
     passes = _accumulate_passes([r.passes_per_epoch for r in resolved],
                                 epochs_per_row, histories.shape[1] - 1)
@@ -692,11 +738,17 @@ def _assemble_result(specs: Tuple[SweepSpec, ...],
         from repro.obs import telemetry as _telemetry
         telemetry = _telemetry.compute(specs, resolved, histories, final_w,
                                        w_init)
+    diverged_rows = None
+    if diverged:
+        diverged_rows = np.full(len(specs), -1, np.int64)
+        for c, e in diverged.items():
+            diverged_rows[c] = e
     return SweepResult(specs=specs, histories=histories,
                        effective_passes=passes, final_w=final_w,
                        total_updates=total_updates,
                        epochs_per_row=epochs_per_row,
-                       param_shapes=param_shapes, telemetry=telemetry)
+                       param_shapes=param_shapes, telemetry=telemetry,
+                       diverged_rows=diverged_rows)
 
 
 def run_sweep(obj: Optional[Objective], epochs: int,

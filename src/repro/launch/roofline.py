@@ -417,6 +417,34 @@ def sweep_epoch_roofline(*, rows: int, dim: int, total: int, epochs: int,
     return out
 
 
+def attained_fraction(*, rows: int, dim: int, total: int, epochs: int,
+                      buf_len: int, fused: bool, wall_s: float,
+                      hw: HardwareSpec = TPU_V5E) -> Dict:
+    """Attained-vs-roofline fraction for one MEASURED group dispatch.
+
+    Selects the engine path (vmap or fused megakernel) of
+    :func:`sweep_epoch_roofline` and divides its step lower bound by the
+    measured wall time — the per-group "how close to the hardware are
+    we" number the performance ledger (``repro.obs.ledger``) records and
+    the multi-host fabric will route on. On a backend other than ``hw``
+    (e.g. the CPU CI container vs the TPU_V5E default) the fraction is a
+    cross-hardware comparison, not a utilization: still monotone in
+    dispatch speed, so regressions show, but only meaningful in absolute
+    terms when ``hw`` matches the machine.
+    """
+    rf = sweep_epoch_roofline(rows=rows, dim=dim, total=total,
+                              epochs=epochs, buf_len=buf_len, hw=hw)
+    path = rf["fused" if fused else "vmap"]
+    return {
+        "roofline_s": path["step_lower_bound_s"],
+        "attained_frac": (path["step_lower_bound_s"] / wall_s
+                          if wall_s > 0 else 0.0),
+        "flops": rf["flops"],
+        "bytes": path["bytes"],
+        "dominant": path["dominant"],
+    }
+
+
 # ---------------------------------------------------------------------------
 # Terms
 # ---------------------------------------------------------------------------

@@ -1,0 +1,230 @@
+"""Per-group performance ledger: compile time, FLOPs, attained fraction.
+
+Each compiled group runner (the unit the service caches — one jit per
+``(objective, engine, M̃, option, buf_len, fused)`` group at a given
+row width and epoch budget) gets one ledger entry recording
+
+* how many dispatches ran through it and how many traced+compiled,
+* the wall-clock of the compiling dispatch(es) (``compile_s``) and the
+  best warm dispatch (``warm_wall_min_s``),
+* FLOPs/bytes from XLA's own ``jit(...).lower().compile()
+  .cost_analysis()`` when the backend provides it, falling back to the
+  analytic epoch model from :mod:`repro.launch.roofline`,
+* the attained-vs-roofline fraction: the roofline step lower bound for
+  the group's path (vmap or fused) divided by the best measured warm
+  wall time — the live form of the BENCH_kernel_sweep comparison, and
+  the signal the multi-host fabric will route cache-affinity on.
+
+The ledger is **opt-in** (``enable_ledger``) and entirely host-side:
+the only thing it adds to a dispatch is two ``perf_counter`` reads
+bracketing the runner call, gated by one bool (RL006 boundary).  It is
+exported as ``repro_ledger_*`` Prometheus series, the ``GET /ledger``
+JSON dump, and the schema-gated ``BENCH_progress_ledger.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = [
+    "LedgerEntry",
+    "PerfLedger",
+    "ledger",
+    "ledger_enabled",
+    "enable_ledger",
+    "disable_ledger",
+    "note_compile",
+]
+
+_TLS = threading.local()
+
+
+def note_compile() -> None:
+    """Trace-time hook: ``service.cache._counted`` calls this when the
+    wrapped group fn actually traces, so the in-flight
+    ``record_dispatch`` on the same thread can attribute the wall time
+    it measured to compilation."""
+    _TLS.compiled = True
+
+
+def _take_compiled() -> bool:
+    c = getattr(_TLS, "compiled", False)
+    _TLS.compiled = False
+    return c
+
+
+@dataclasses.dataclass
+class LedgerEntry:
+    label: str
+    engine: str
+    fused: bool
+    rows: int
+    dim: int
+    total: int
+    buf_len: int
+    epochs: int
+    dispatches: int = 0
+    compiles: int = 0
+    compile_s: float = 0.0        # wall of dispatches that traced+compiled
+    wall_s_total: float = 0.0
+    warm_wall_min_s: float = 0.0  # best non-compiling dispatch (0 until one lands)
+    flops: Optional[float] = None
+    bytes: Optional[float] = None
+    flops_source: str = ""        # "cost_analysis" | "analytic"
+    roofline_s: float = 0.0       # analytic step lower bound for this path
+
+    def attained_frac(self) -> float:
+        wall = self.warm_wall_min_s or (
+            self.wall_s_total / self.dispatches if self.dispatches else 0.0)
+        return self.roofline_s / wall if wall > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "engine": self.engine,
+            "fused": int(self.fused),
+            "rows": self.rows,
+            "dim": self.dim,
+            "total": self.total,
+            "buf_len": self.buf_len,
+            "epochs": self.epochs,
+            "dispatches": self.dispatches,
+            "compiles": self.compiles,
+            "compile_s": self.compile_s,
+            "wall_s_total": self.wall_s_total,
+            "warm_wall_min_s": self.warm_wall_min_s,
+            "flops": self.flops if self.flops is not None else 0.0,
+            "bytes": self.bytes if self.bytes is not None else 0.0,
+            "roofline_s": self.roofline_s,
+            "attained_frac": self.attained_frac(),
+        }
+
+
+def _roofline(entry: LedgerEntry) -> dict:
+    # lazy: launch.roofline is analytic stdlib math but lives in a package
+    # whose __init__ pulls jax; only touched on the cold path
+    from repro.launch.roofline import attained_fraction
+
+    rf = attained_fraction(rows=entry.rows, dim=entry.dim,
+                           total=entry.total, epochs=entry.epochs,
+                           buf_len=entry.buf_len, fused=entry.fused,
+                           wall_s=0.0)
+    return {"flops": float(rf["flops"]), "bytes": float(rf["bytes"]),
+            "step_lower_bound_s": float(rf["roofline_s"])}
+
+
+class PerfLedger:
+    """Thread-safe map from group/runner identity to a ``LedgerEntry``."""
+
+    def __init__(self, max_entries: int = 256):
+        self._lock = threading.Lock()
+        self._entries: Dict[Tuple, LedgerEntry] = {}  # guarded-by: _lock
+        self._max = max_entries
+
+    def record_dispatch(
+        self,
+        *,
+        key: Tuple,
+        rows: int,
+        dim: int,
+        epochs: int,
+        wall_s: float,
+        cost_fn: Optional[Callable[[], Optional[dict]]] = None,
+    ) -> None:
+        """Account one runner call.  ``key`` is the group key from
+        ``plan_sweep``; ``rows`` the dispatched (padded) width; ``cost_fn``
+        an AOT ``cost_analysis`` thunk, invoked at most once per entry and
+        only on the compiling (cold) dispatch so the warm path never pays
+        for it."""
+        compiled = _take_compiled()
+        _, engine, total, option, buf_len, fused = key
+        ek = (key, int(rows), int(epochs))
+        label = (f"{engine}-{'fused' if fused else 'vmap'}-M{int(total)}"
+                 f"-opt{option}-buf{int(buf_len)}-rows{int(rows)}-E{int(epochs)}")
+        with self._lock:
+            entry = self._entries.get(ek)
+            if entry is None:
+                if len(self._entries) >= self._max:
+                    return
+                entry = LedgerEntry(label=label, engine=str(engine),
+                                    fused=bool(fused), rows=int(rows),
+                                    dim=int(dim), total=int(total),
+                                    buf_len=int(buf_len), epochs=int(epochs))
+                rf = _roofline(entry)
+                entry.roofline_s = rf["step_lower_bound_s"]
+                entry.flops = rf["flops"]
+                entry.bytes = rf["bytes"]
+                entry.flops_source = "analytic"
+                self._entries[ek] = entry
+            entry.dispatches += 1
+            entry.wall_s_total += wall_s
+            if compiled:
+                entry.compiles += 1
+                entry.compile_s += wall_s
+            elif entry.warm_wall_min_s == 0.0 or wall_s < entry.warm_wall_min_s:
+                entry.warm_wall_min_s = wall_s
+            want_cost = compiled and cost_fn is not None \
+                and entry.flops_source != "cost_analysis"
+        if not want_cost:
+            return
+        try:
+            cost = cost_fn()
+        except Exception:
+            cost = None
+        if not cost:
+            return
+        flops = cost.get("flops")
+        nbytes = cost.get("bytes accessed")
+        with self._lock:
+            if flops is not None:
+                entry.flops = float(flops)
+                entry.flops_source = "cost_analysis"
+            if nbytes is not None:
+                entry.bytes = float(nbytes)
+
+    def snapshot(self) -> Dict[str, dict]:
+        """``label -> numeric leaves`` — the shape the Prometheus walker
+        fans out under the ``group`` label and ``/ledger`` serves raw."""
+        with self._lock:
+            entries = list(self._entries.values())
+        out: Dict[str, dict] = {}
+        for e in entries:
+            d = e.as_dict()
+            if e.flops_source:
+                d["flops_source"] = e.flops_source
+            out[e.label] = d
+        return out
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+
+_LEDGER = PerfLedger()
+_ENABLED = False
+
+
+def ledger() -> PerfLedger:
+    return _LEDGER
+
+
+def ledger_enabled() -> bool:
+    """The one-bool fast path checked at every dispatch site."""
+    return _ENABLED
+
+
+def enable_ledger() -> PerfLedger:
+    global _ENABLED
+    _ENABLED = True
+    return _LEDGER
+
+
+def disable_ledger(clear: bool = False) -> None:
+    global _ENABLED
+    _ENABLED = False
+    if clear:
+        _LEDGER.clear()

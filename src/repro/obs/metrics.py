@@ -8,8 +8,9 @@ stdlib implementation of the text-exposition contract: fixed upper
 bounds, cumulative counts at render time, `_sum`/`_count` series.
 
 `ServiceHistograms` is the fixed set every `SweepService` carries
-(observed inside `flush()`, always on — four integer increments per
-flush is noise next to an XLA dispatch):
+(observed inside `flush()`, on by default — four integer increments per
+flush is noise next to an XLA dispatch, but the ``enabled`` flag lets
+`benchmarks/obs_overhead.py` attribute per-feature overhead deltas):
 
   * ``flush_latency_seconds``   — one coalesced dispatch, wall clock
   * ``request_latency_seconds`` — submit -> result-available, per request
@@ -82,6 +83,10 @@ class ServiceHistograms:
     `repro.obs.prometheus.render` under ``repro_<name>``."""
 
     def __init__(self):
+        # observe-site gate (one bool read, checked by the service before
+        # recording). Default on; obs_overhead flips it per measurement
+        # round to price the histogram feature in isolation.
+        self.enabled = True
         self.flush_latency_seconds = Histogram(LATENCY_BUCKETS_S)
         self.request_latency_seconds = Histogram(LATENCY_BUCKETS_S)
         self.rows_per_flush = Histogram(ROWS_BUCKETS)

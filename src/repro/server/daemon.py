@@ -40,6 +40,7 @@ import dataclasses
 import tempfile
 import threading
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.checkpoint import Checkpointer
@@ -189,6 +190,13 @@ class ServeDaemon:
                         if policy.stable_widths else None)
         self._jobs: List[Tuple[JobHandle, Checkpointer, bool]] = []  # guarded-by: _lock
         self._next_job_id = 0  # guarded-by: _lock
+        # job-id -> handle registry for the HTTP tier (POST /job submits,
+        # GET /job/<id> polls). FIFO-bounded like the service's result
+        # store: finished handles of a long-lived server age out, and a
+        # client polling an evicted id gets the same KeyError an unknown
+        # one raises.
+        self._handles: "OrderedDict[int, JobHandle]" = OrderedDict()  # guarded-by: _lock
+        self._max_handles = 256
         # monotonic stamp the flush thread refreshes once per loop turn;
         # /healthz compares its age against policy.heartbeat_stall_s
         self._heartbeat: Optional[float] = None  # guarded-by: _lock
@@ -269,8 +277,17 @@ class ServeDaemon:
                                epochs)
             self._next_job_id += 1
             self._jobs.append((handle, checkpointer, owns_spool))
+            self._handles[handle.job_id] = handle
+            while len(self._handles) > self._max_handles:
+                self._handles.popitem(last=False)
         self._wake.set()
         return handle
+
+    def job(self, job_id: int) -> JobHandle:
+        """The registered handle for ``job_id`` (HTTP ``GET /job/<id>``);
+        raises KeyError for an unknown or aged-out id."""
+        with self._lock:
+            return self._handles[job_id]
 
     def jobs_pending(self) -> int:
         with self._lock:
@@ -394,9 +411,14 @@ class ServeDaemon:
                 return False
             handle, ckpt, owns_spool = self._jobs.pop(0)
         try:
+            # tenant + progress channel ride along: each slice publishes a
+            # live event on "job-<id>" when progress streaming is enabled,
+            # and the watchdog (if configured) applies this tenant's policy
             result, done = self.service.run_job(
                 handle.specs, handle.epochs, checkpointer=ckpt,
-                max_groups=self.policy.job_groups_per_slice)
+                max_groups=self.policy.job_groups_per_slice,
+                tenant=handle.tenant,
+                progress_id=f"job-{handle.job_id}")
         except Exception as e:
             with self._lock:
                 self.stats.jobs_failed += 1

@@ -22,6 +22,27 @@ daemon below it are already thread-safe) exposing the serving tier:
     GET  /healthz   -> {"status": "ok", ...}; 503 {"status": "stalled"}
                     when the flush daemon's heartbeat is older than
                     ``FlushPolicy.heartbeat_stall_s`` or its thread died
+    GET  /watch?id=job-N&cursor=C&timeout_s=S
+                    -> {"events": [...], "cursor": C', "enabled": bool}
+                    long-poll on the live-progress bus
+                    (`repro.obs.progress`): per-slice loss events while a
+                    job/flush is still running. ``cursor`` resumes past
+                    the last seen event; omit ``id`` for the firehose
+                    (every channel). Empty ``events`` after ``timeout_s``
+                    means "nothing new yet" — poll again with the same
+                    cursor.
+    POST /job       {"specs": [...], "epochs"?, "tenant"?}
+                    -> {"job_id": N, "watch_id": "job-N"}  (requires the
+                    flush daemon; the job time-slices between flushes and
+                    streams per-slice events on its watch channel)
+    GET  /job/N?timeout_s=S
+                    -> the finished job's SweepResult (504 pending while
+                    slices still run — watch /watch?id=job-N meanwhile)
+    GET  /ledger    -> {"enabled": bool, "groups": {...}} — the per-group
+                    performance ledger (`repro.obs.ledger`): compile
+                    time, FLOPs/bytes, attained-vs-roofline fraction per
+                    compiled group runner (all zeros/empty until
+                    ``enable_ledger()``)
 
 Status mapping: bad input 400; unknown id 404; completed-but-evicted id
 410 (`ResultEvictedError` — re-submit or raise ``max_results``); result
@@ -46,6 +67,8 @@ from urllib.parse import parse_qs, urlparse
 import numpy as np
 
 from repro.core.sweep import SweepResult, SweepSpec
+from repro.obs import ledger as _ledger
+from repro.obs import progress as _progress
 from repro.obs import prometheus as _prometheus
 from repro.obs import telemetry as _obs_telemetry
 from repro.obs.trace import tracer as _tracer
@@ -56,6 +79,7 @@ from repro.service.api import ResultEvictedError, SweepService
 
 _SPEC_FIELDS = {f.name: f.type for f in dataclasses.fields(SweepSpec)}
 _RESULT_PATH = re.compile(r"^/result/(\d+)$")
+_JOB_PATH = re.compile(r"^/job/(\d+)$")
 # bound server-side result waits so a dead daemon can't pin handler
 # threads forever; clients long-poll in increments below this
 MAX_WAIT_S = 30.0
@@ -90,11 +114,14 @@ def result_to_dict(request_id: int, res: SweepResult) -> dict:
         "param_shapes": [list(entry) for entry in res.param_shapes],
         "telemetry": (None if res.telemetry is None
                       else _obs_telemetry.to_dict(res.telemetry)),
+        "diverged_rows": (None if res.diverged_rows is None
+                          else res.diverged_rows.tolist()),
     }
 
 
 def result_from_dict(payload: dict) -> SweepResult:
     telemetry = payload.get("telemetry")
+    diverged = payload.get("diverged_rows")   # absent on pre-watchdog wires
     return SweepResult(
         specs=tuple(spec_from_dict(s) for s in payload["specs"]),
         histories=np.asarray(payload["histories"], np.float32),
@@ -105,7 +132,9 @@ def result_from_dict(payload: dict) -> SweepResult:
         param_shapes=tuple((path, tuple(shape), dtype) for path, shape, dtype
                            in payload.get("param_shapes", ())),
         telemetry=(None if telemetry is None
-                   else _obs_telemetry.from_dict(telemetry)))
+                   else _obs_telemetry.from_dict(telemetry)),
+        diverged_rows=(None if diverged is None
+                       else np.asarray(diverged, np.int64)))
 
 
 # ---------------------------------------------------------------- handler
@@ -156,9 +185,15 @@ class _Handler(BaseHTTPRequestHandler):
     def do_GET(self) -> None:          # noqa: N802 (stdlib handler API)
         url = urlparse(self.path)
         m = _RESULT_PATH.match(url.path)
+        mj = _JOB_PATH.match(url.path)
         try:
             if url.path == "/healthz":
                 self._get_healthz()
+            elif url.path == "/watch":
+                self._get_watch(url.query)
+            elif url.path == "/ledger":
+                self._json(200, {"enabled": _ledger.ledger_enabled(),
+                                 "groups": _ledger.ledger().snapshot()})
             elif url.path == "/stats":
                 self._json(200, _metrics.snapshot(
                     self.svc, self.server.daemon, self.server.fairness))
@@ -173,6 +208,8 @@ class _Handler(BaseHTTPRequestHandler):
                 self._get_trace(url.query)
             elif m:
                 self._get_result(int(m.group(1)), url.query)
+            elif mj:
+                self._get_job(int(mj.group(1)), url.query)
             else:
                 self._error(404, f"no route {url.path!r}")
         except BrokenPipeError:          # client went away mid-write
@@ -213,6 +250,51 @@ class _Handler(BaseHTTPRequestHandler):
         self._json(200, {"enabled": tr.enabled, "recent": tr.recent(),
                          "last_error": tr.last_error()})
 
+    def _get_watch(self, query: str) -> None:
+        q = parse_qs(query)
+        try:
+            cursor = int(q.get("cursor", ["0"])[0])
+            timeout = float(q.get("timeout_s", ["10"])[0])
+        except ValueError:
+            return self._error(400, "cursor must be an int and timeout_s "
+                               "a number")
+        timeout = max(0.0, min(timeout, MAX_WAIT_S))
+        ids = q.get("id")
+        watch_id = ids[0] if ids else None    # None = firehose
+        bus = _progress.progress_bus()
+        events, nxt = bus.watch(cursor=cursor, watch_id=watch_id,
+                                timeout=timeout)
+        self._json(200, {"events": [e.to_dict() for e in events],
+                         "cursor": nxt,
+                         "enabled": _progress.progress_enabled()})
+
+    def _get_job(self, job_id: int, query: str) -> None:
+        daemon = self.server.daemon
+        if daemon is None:
+            return self._error(400, "no flush daemon: jobs need a "
+                               "policy-driven server (policy=...)")
+        try:
+            timeout = float(parse_qs(query).get("timeout_s", ["10"])[0])
+        except ValueError:
+            return self._error(400, "timeout_s must be a number")
+        timeout = max(0.0, min(timeout, MAX_WAIT_S))
+        try:
+            handle = daemon.job(job_id)
+        except KeyError:
+            return self._error(404, f"unknown job id {job_id} (never "
+                               "submitted, or aged out of the handle "
+                               "registry)", status="unknown")
+        try:
+            res = handle.result(timeout=timeout)
+        except TimeoutError:
+            return self._error(
+                504, f"job {job_id} still running after {timeout}s "
+                f"({handle.slices} slices so far; stream "
+                f"/watch?id=job-{job_id} meanwhile)", status="pending")
+        payload = result_to_dict(job_id, res)
+        payload["job_id"] = job_id
+        self._json(200, payload)
+
     def _safe_error(self, e: Exception) -> None:
         try:
             self._error(500, f"{type(e).__name__}: {e}")
@@ -245,6 +327,8 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if url.path == "/submit":
                 self._post_submit()
+            elif url.path == "/job":
+                self._post_job()
             elif url.path == "/flush":
                 if self.server.daemon is not None:
                     done = self.server.daemon.flush_now()
@@ -280,6 +364,26 @@ class _Handler(BaseHTTPRequestHandler):
         tid = self.svc.trace_id(rid)
         self._json(200, {"request_id": rid, "trace_id": tid},
                    {"X-Trace-Id": tid} if tid else None)
+
+    def _post_job(self) -> None:
+        if self.server.daemon is None:
+            return self._error(400, "no flush daemon: jobs need a "
+                               "policy-driven server (policy=...)")
+        payload = self._read_body()
+        specs_raw = payload.get("specs")
+        if not isinstance(specs_raw, list) or not specs_raw:
+            raise ValueError('"specs" must be a non-empty list of spec '
+                             "objects")
+        specs = [spec_from_dict(s) for s in specs_raw]
+        epochs = payload.get("epochs")
+        if epochs is not None:
+            epochs = int(epochs)
+        handle = self.server.daemon.submit_job(
+            specs, epochs, tenant=str(payload.get("tenant", "default")))
+        # watch_id matches the progress channel run_job publishes on for
+        # daemon-sliced jobs (daemon passes progress_id=f"job-{id}")
+        self._json(200, {"job_id": handle.job_id,
+                         "watch_id": f"job-{handle.job_id}"})
 
 
 # ----------------------------------------------------------------- server

@@ -46,13 +46,31 @@ from repro.core.sweep import (
     _assemble_result,
     _dispatch_group,
     _write_row_history,
+    group_label,
     plan_sweep,
 )
+from repro.obs import progress as _progress
 from repro.obs.metrics import ServiceHistograms
 from repro.obs.trace import tracer as _tracer
 from repro.service import cache as _cache
 from repro.service.scheduler import (FlushSelector, SweepRequest,
                                      WidthPolicy, coalesce, dispatch)
+
+
+def _row_loss_series(histories, epochs_per_row):
+    """Per-row ``(losses, deltas)`` for live-progress events, each row
+    trimmed to its own epoch budget. Host-side numpy over the RETURNED
+    histories (never inside jit — RL006), and value-exact: a float32
+    history entry round-trips through the Python float unchanged, so a
+    watcher can compare streamed losses bit-for-bit against the final
+    ``SweepResult``."""
+    losses = []
+    deltas = []
+    for c in range(histories.shape[0]):
+        h = histories[c, :int(epochs_per_row[c]) + 1]
+        losses.append(tuple(float(v) for v in h))
+        deltas.append(tuple(float(v) for v in np.diff(h)))
+    return tuple(losses), tuple(deltas)
 
 
 class ResultEvictedError(KeyError):
@@ -81,6 +99,7 @@ class ServiceStats:
     cache_misses: int
     compiles: int
     rows_padded: int = 0         # stable-width pad rows ever dispatched
+    rows_diverged: int = 0       # rows the divergence watchdog flagged
 
     @property
     def cache_hit_rate(self) -> float:
@@ -108,12 +127,18 @@ class SweepService:
                  drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
                  w0=None, max_results: int = 1024,
                  width_policy: Optional[WidthPolicy] = None,
-                 latency_window: int = 512, max_tenants: int = 1024):
+                 latency_window: int = 512, max_tenants: int = 1024,
+                 watchdog=None):
         self.obj = obj
         self.default_epochs = epochs
         self.drop_prob = drop_prob
         self.mesh = mesh
         self.w0 = w0
+        # divergence watchdog (repro.obs.watchdog.Watchdog, or None):
+        # inspects every dispatched group's histories at flush/slice
+        # boundaries and applies the owning tenant's policy. Config like
+        # width_policy — set before serving, never mutated mid-flight.
+        self.watchdog = watchdog
         # flush-policy hooks the serving tier (repro.server) installs: a
         # width policy keeps dispatched batch widths at previously-compiled
         # values; submit listeners wake the background flush daemon
@@ -155,6 +180,7 @@ class SweepService:
         self._groups_dispatched = 0  # guarded-by: _lock
         self._groups_merged = 0  # guarded-by: _lock
         self._rows_padded = 0  # guarded-by: _lock
+        self._rows_diverged = 0  # guarded-by: _lock
         self._flushes = 0  # guarded-by: _lock
         # tenant -> [rows submitted, rows completed] (metrics endpoint);
         # FIFO-bounded like the results store — tenant tags are arbitrary
@@ -276,7 +302,8 @@ class SweepService:
                 results, info = dispatch(self.obj, batch, w0=self.w0,
                                          drop_prob=self.drop_prob,
                                          mesh=_active_mesh(self.mesh),
-                                         width_policy=self.width_policy)
+                                         width_policy=self.width_policy,
+                                         watchdog=self.watchdog)
         except Exception as exc:
             for r in pending:
                 tr.record_error(r.trace_id, exc)
@@ -288,12 +315,15 @@ class SweepService:
             raise
         now = time.monotonic()
         dt = time.perf_counter() - t0
-        self.histograms.flush_latency_seconds.observe(dt)
-        self.histograms.rows_per_flush.observe(info.rows_dispatched)
-        if info.rows_dispatched:
-            self.histograms.pad_factor.observe(
-                (info.rows_dispatched + info.rows_padded)
-                / info.rows_dispatched)
+        if self.histograms.enabled:
+            self.histograms.flush_latency_seconds.observe(dt)
+            self.histograms.rows_per_flush.observe(info.rows_dispatched)
+            if info.rows_dispatched:
+                self.histograms.pad_factor.observe(
+                    (info.rows_dispatched + info.rows_padded)
+                    / info.rows_dispatched)
+        if _progress.progress_enabled():
+            self._publish_flush_events(pending, results, dt)
         with self._lock:
             self._results.update(results)
             # evict oldest first, but never a result a thread is blocked
@@ -310,6 +340,7 @@ class SweepService:
             self._groups_dispatched += info.groups_dispatched
             self._groups_merged += info.groups_merged
             self._rows_padded += info.rows_padded
+            self._rows_diverged += info.rows_diverged
             self._flushes += 1
             self._flush_latencies.append(dt)
             for req in pending:
@@ -318,9 +349,31 @@ class SweepService:
                 if req.submitted_at:
                     latency = now - req.submitted_at
                     self._request_latencies.append(latency)
-                    self.histograms.request_latency_seconds.observe(latency)
+                    if self.histograms.enabled:
+                        self.histograms.request_latency_seconds.observe(
+                            latency)
             self._done_cv.notify_all()
         return sorted(results)
+
+    def _publish_flush_events(self, pending, results, dt: float) -> None:
+        """One live-progress event per request this flush completed, on the
+        ``req-<id>`` watch channel. Losses are the request's OWN result
+        histories (each row trimmed to its epoch budget), so what a
+        watcher streams is exactly what ``result()`` later returns."""
+        bus = _progress.progress_bus()
+        by_id = {r.request_id: r for r in pending}
+        for rid, res in results.items():
+            req = by_id[rid]
+            losses, deltas = _row_loss_series(res.histories,
+                                              res.epochs_per_row)
+            diverged = ()
+            if res.diverged_rows is not None:
+                diverged = tuple(int(c) for c in
+                                 np.flatnonzero(res.diverged_rows >= 0))
+            bus.publish(kind="flush", watch_id=f"req-{rid}",
+                        tenant=req.tenant, rows=tuple(range(len(res.specs))),
+                        losses=losses, loss_deltas=deltas, diverged=diverged,
+                        wall_s=dt, trace_id=req.trace_id)
 
     def _missing(self, request_id: int) -> KeyError:  # holds: _lock
         """The right error for an id that is not pending/inflight/stored.
@@ -481,13 +534,16 @@ class SweepService:
                 cache_hits=cache.hits,
                 cache_misses=cache.misses,
                 compiles=cache.compiles,
-                rows_padded=self._rows_padded)
+                rows_padded=self._rows_padded,
+                rows_diverged=self._rows_diverged)
 
     # ------------------------------------------------------ checkpointed job
     def run_job(self, specs: Sequence[SweepSpec],
                 epochs: Optional[int] = None, *,
                 checkpointer: Checkpointer,
                 max_groups: Optional[int] = None,
+                tenant: str = "default",
+                progress_id: Optional[str] = None,
                 ) -> Tuple[Optional[SweepResult], bool]:
         """Run one long sweep group-by-group with checkpoint-resume.
 
@@ -499,8 +555,20 @@ class SweepService:
         DIFFERENT job from the same directory. ``max_groups`` caps how many
         groups this call dispatches (preemption budget).
 
+        Each group boundary is a live-observability slice: when progress
+        streaming is on (`repro.obs.progress`) a ``slice`` event carrying
+        the group's per-row loss series is published to ``progress_id``
+        (the serving daemon passes ``job-<id>``), plus a final ``done``
+        event. When ``self.watchdog`` is set, each slice's histories are
+        inspected; ``tenant`` selects the per-tenant policy, and a
+        ``cancel_job`` verdict raises `repro.obs.watchdog.JobDiverged`
+        (finished groups stay checkpointed). Watchdog truncations persist
+        in the checkpoint (``epochs_eff``/``diverged`` arrays), so a
+        resumed job keeps its frozen rows.
+
         Returns ``(result, done)`` — ``result`` is None until every group
-        has run, then bit-identical to ``run_sweep(obj, epochs, specs)``.
+        has run, then bit-identical to ``run_sweep(obj, epochs, specs)``
+        (with ``diverged_rows`` marked when the watchdog intervened).
         """
         epochs = epochs if epochs is not None else self.default_epochs
         plan = plan_sweep(self.obj, epochs, specs)
@@ -532,6 +600,14 @@ class SweepService:
             "final_w": np.zeros((C, job_obj.flat_dim), np.float32),
             "done": np.zeros((len(group_items),), np.int8),
             "fingerprint": np.asarray(fp, np.int64),
+            # watchdog bookkeeping: the EFFECTIVE per-row epoch budget
+            # (cancel_row truncations land here) and the diverged marker
+            # (-1 healthy, else last trusted epoch). Checkpointed so a
+            # resumed job keeps its frozen rows. (Checkpoints written
+            # before these keys existed restore as "different job" — the
+            # template-keyed restore already rejects them.)
+            "epochs_eff": epochs_per_row.copy(),
+            "diverged": np.full((C,), -1, np.int64),
         }
         try:
             state, _ = checkpointer.restore(state)
@@ -549,6 +625,7 @@ class SweepService:
                     f"(fingerprint {int(state['fingerprint'])} != {fp})")
 
         mesh = _active_mesh(self.mesh)
+        watch_id = progress_id if progress_id is not None else "job"
         dispatched = 0
         with _cache.scoped_counters(self._cache_sink):
             for gi, (key_, members) in enumerate(group_items):
@@ -557,10 +634,33 @@ class SweepService:
                 if max_groups is not None and dispatched >= max_groups:
                     return None, False
                 group_epochs = plan.group_epochs(key_)
+                # the slice's resolved rows honour earlier truncations
+                # (this call's or a restored checkpoint's)
+                res_rows = [r._replace(epochs=int(e)) if int(e) != r.epochs
+                            else r
+                            for r, e in zip(resolved, state["epochs_eff"])]
+                t0 = time.perf_counter()
                 hist, w_fin = _dispatch_group(job_obj, plan.specs,
-                                              resolved, members, key_,
+                                              res_rows, members, key_,
                                               group_epochs, w_init,
                                               self.drop_prob, mesh)
+                if self.watchdog is not None:
+                    from repro.obs.watchdog import enforce_group
+
+                    hist, w_fin, bad, overrides = enforce_group(
+                        self.watchdog, hist, w_fin, members=members,
+                        resolved=res_rows, tenant_of=lambda c: tenant,
+                        redispatch=lambda amended: _dispatch_group(
+                            job_obj, plan.specs, amended, members, key_,
+                            group_epochs, w_init, self.drop_prob, mesh))
+                    for c, e in bad.items():
+                        state["diverged"][c] = e
+                    for c, k in overrides.items():
+                        state["epochs_eff"][c] = k
+                    if bad:
+                        with self._lock:
+                            self._rows_diverged += len(bad)
+                wall_s = time.perf_counter() - t0
                 for row, c in enumerate(members):
                     _write_row_history(state["histories"][c], hist[row],
                                        group_epochs)
@@ -572,7 +672,37 @@ class SweepService:
                 checkpointer.save(state, step=int(state["done"].sum()),
                                   extra={"job_fingerprint": int(fp),
                                          "groups_total": len(group_items)})
-        return _assemble_result(plan.specs, resolved, state["histories"],
-                                state["final_w"],
-                                param_shapes=job_obj.param_shapes(),
-                                w_init=w_init), True
+                if _progress.progress_enabled():
+                    self._publish_slice_event(
+                        watch_id, tenant, key_, gi, len(group_items),
+                        members, state, wall_s)
+        result = _assemble_result(
+            plan.specs,
+            [r._replace(epochs=int(e)) if int(e) != r.epochs else r
+             for r, e in zip(resolved, state["epochs_eff"])],
+            state["histories"], state["final_w"],
+            param_shapes=job_obj.param_shapes(), w_init=w_init,
+            diverged={int(c): int(e)
+                      for c, e in enumerate(state["diverged"]) if e >= 0})
+        if _progress.progress_enabled():
+            _progress.progress_bus().publish(
+                kind="done", watch_id=watch_id, tenant=tenant,
+                slices_total=len(group_items))
+        return result, True
+
+    def _publish_slice_event(self, watch_id, tenant, key_, gi, n_groups,
+                             members, state, wall_s) -> None:
+        """One ``slice`` event per dispatched job group: the slice's rows
+        with their loss series AS CHECKPOINTED (each trimmed to the row's
+        effective epoch budget — watchdog freezes included), so streaming
+        watchers see exactly the final result's histories, incrementally."""
+        hist_rows = state["histories"][list(members)]
+        eff = state["epochs_eff"][list(members)]
+        losses, deltas = _row_loss_series(hist_rows, eff)
+        diverged = tuple(int(c) for c in members
+                         if state["diverged"][c] >= 0)
+        _progress.progress_bus().publish(
+            kind="slice", watch_id=watch_id, tenant=tenant,
+            group=group_label(key_), slice_index=gi, slices_total=n_groups,
+            rows=tuple(int(c) for c in members), losses=losses,
+            loss_deltas=deltas, diverged=diverged, wall_s=wall_s)

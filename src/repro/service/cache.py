@@ -41,6 +41,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core import sweep as _sweep
+from repro.obs import ledger as _ledger
 from repro.obs.trace import tracer as _tracer
 from repro.sharding.context import mesh_fingerprint
 
@@ -96,6 +97,21 @@ def scoped_counters(sink: _Counters):
         yield sink
     finally:
         _TLS.sink = prev
+
+
+@contextlib.contextmanager
+def uncounted_trace():
+    """Suspend compile counting on this thread: a re-trace forced for
+    bookkeeping (the ledger's one-time AOT ``cost_analysis`` of an
+    already-compiled runner) is not a user-visible (re)compile, and must
+    not perturb the exact-compile-count contracts (`tests/test_service.py`,
+    the obs-smoke 0-recompiles gate)."""
+    prev = getattr(_TLS, "uncounted", False)
+    _TLS.uncounted = True
+    try:
+        yield
+    finally:
+        _TLS.uncounted = prev
 
 
 def _credit(field: str) -> None:
@@ -155,12 +171,17 @@ def _counted(fn):
     happens when the cached runner is CALLED (no lock held), so taking
     _LOCK here cannot deadlock with `get_group_runner`."""
     def traced(*args):
+        if getattr(_TLS, "uncounted", False):
+            return fn(*args)
         with _LOCK:
             _credit("compiles")
         # trace-time host Python on the dispatching thread: the open
         # dispatch/execute span group (if any) gets the attribution; the
         # tracer's lock is a leaf, so holding no cache lock here matters
         _tracer().annotate(compiled=True)
+        # same-thread hook: lets the performance ledger attribute the
+        # wall time of the dispatch in flight to compilation
+        _ledger.note_compile()
         return fn(*args)
     return traced
 

@@ -132,6 +132,7 @@ class DispatchInfo(NamedTuple):
     groups_merged: int       # groups holding rows from >1 request
     rows_padded: int = 0     # stable-width pad rows (wasted compute bought
     #                          against a retrace — see WidthPolicy)
+    rows_diverged: int = 0   # rows the divergence watchdog flagged
 
 
 def coalesce(obj: Optional[Objective],
@@ -166,6 +167,7 @@ def coalesce(obj: Optional[Objective],
 def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
              drop_prob: float = 0.02, mesh: Optional[Mesh] = None,
              width_policy: Optional[WidthPolicy] = None,
+             watchdog=None,
              ) -> Tuple[Dict[int, SweepResult], DispatchInfo]:
     """Run every merged group once, demux per-request `SweepResult`s.
 
@@ -178,6 +180,14 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
     Each group dispatches with ITS objective (``batch.objectives``); ``w0``
     (flat or pytree) must fit every dispatched objective — leave it None
     for a mixed-objective flush (each starts from its own `init_flat`).
+
+    ``watchdog`` (a `repro.obs.watchdog.Watchdog`) inspects each group's
+    returned histories; a diverging row is handled per its OWNING
+    request's tenant policy. A coalesced flush mixes tenants, so the
+    ``cancel_job`` policy degrades to ``cancel_row`` here (one tenant's
+    divergence must never cancel another's rows); the re-dispatch a
+    cancel triggers reuses the padded width and the cached runner, and
+    surviving rows keep their first-dispatch outputs bit-identical.
     """
     specs, resolved = batch.specs, batch.resolved
     w_inits = {ofp: (o.init_flat() if w0 is None else o.as_flat(w0))
@@ -210,6 +220,8 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
     rows_coalesced = 0
     groups_merged = 0
     rows_padded = 0
+    diverged_flat: Dict[int, int] = {}   # flat row -> last trusted epoch
+    epoch_overrides: Dict[int, int] = {}  # flat row -> truncated budget
     for key_, members in batch.groups.items():
         member_tids = _member_tids(members)
         group_epochs = batch.group_epochs(key_)
@@ -232,6 +244,20 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
             hist, w_fin = _dispatch_group(group_obj, specs, resolved,
                                           run_members, key_, group_epochs,
                                           w_inits[key_[0]], drop_prob, mesh)
+        if watchdog is not None:
+            from repro.obs.watchdog import enforce_group
+
+            hist, w_fin, bad, overrides = enforce_group(
+                watchdog, hist, w_fin, members=run_members,
+                resolved=resolved, real=len(members),
+                tenant_of=lambda c: batch.request_plans[
+                    bisect.bisect_right(offsets, c) - 1].request.tenant,
+                redispatch=lambda amended: _dispatch_group(
+                    group_obj, specs, amended, run_members, key_,
+                    group_epochs, w_inits[key_[0]], drop_prob, mesh),
+                allow_cancel_job=False)
+            diverged_flat.update(bad)
+            epoch_overrides.update(overrides)
         hist, w_fin = hist[:len(members)], w_fin[:len(members)]
         owners = {bisect.bisect_right(offsets, c) - 1 for c in members}
         if len(owners) > 1:
@@ -251,14 +277,31 @@ def dispatch(obj: Optional[Objective], batch: CoalescedBatch, *, w0=None,
         if tr.enabled else ()
     with tr.span_all(all_tids, "demux", parent_name="coalesce"):
         for rp, (hists, finals, _) in zip(batch.request_plans, buffers):
+            res_rows = rp.plan.resolved
+            req_diverged = None
+            if diverged_flat:
+                n = len(rp.plan.specs)
+                req_diverged = {c - rp.offset: e
+                                for c, e in diverged_flat.items()
+                                if rp.offset <= c < rp.offset + n}
+                if any(rp.offset <= c < rp.offset + n
+                       for c in epoch_overrides):
+                    res_rows = list(res_rows)
+                    for c, k in epoch_overrides.items():
+                        if rp.offset <= c < rp.offset + n:
+                            local = c - rp.offset
+                            res_rows[local] = \
+                                res_rows[local]._replace(epochs=k)
             results[rp.request.request_id] = _assemble_result(
-                rp.plan.specs, rp.plan.resolved, hists, finals,
+                rp.plan.specs, res_rows, hists, finals,
                 param_shapes=rp.plan.objective.param_shapes(),
-                w_init=w_inits[rp.plan.objective.fingerprint()])
+                w_init=w_inits[rp.plan.objective.fingerprint()],
+                diverged=req_diverged)
 
     info = DispatchInfo(groups_dispatched=len(batch.groups),
                         rows_dispatched=len(specs),
                         rows_coalesced=rows_coalesced,
                         groups_merged=groups_merged,
-                        rows_padded=rows_padded)
+                        rows_padded=rows_padded,
+                        rows_diverged=len(diverged_flat))
     return results, info

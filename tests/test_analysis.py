@@ -344,6 +344,33 @@ def test_rl006_allows_observability_at_the_dispatch_site():
     assert lint_source(GOOD_RL006_BRACKETS) == []
 
 
+BAD_RL006_LIVE_OBS = """\
+def sweep_core(w, hist):
+    bus = progress_bus()
+    bus.publish(kind="slice")
+    enforce_group(wd, hist, w)
+    led = ledger()
+    led.record_dispatch(key=k)
+    return w
+"""
+
+
+def test_rl006_flags_progress_watchdog_ledger_inside_core_scopes():
+    """PR-10 surface: the live-progress bus, divergence watchdog and perf
+    ledger are host-side by contract — any call inside a jitted scope is
+    flagged, same as the tracer API."""
+    diags = lint_source(BAD_RL006_LIVE_OBS)
+    assert codes(diags) == ["RL006"] * 5
+    assert [d.line for d in diags] == [2, 3, 4, 5, 6]
+    assert any("progress-bus" in d.message for d in diags)
+    assert any("watchdog" in d.message for d in diags)
+    assert any("ledger" in d.message for d in diags)
+    # the identical calls outside *_core scopes are exactly where they
+    # belong (dispatch sites, services, HTTP handlers)
+    assert lint_source(BAD_RL006_LIVE_OBS.replace(
+        "sweep_core", "dispatch_site")) == []
+
+
 # --------------------------------------------------------- suppression (RL000)
 def test_suppression_with_reason_silences_finding():
     src = BAD_RL001_AXISLESS.replace(

@@ -149,3 +149,47 @@ def test_wire_codec_round_trips_bits(obj):
     assert back.histories.dtype == np.float32
     assert back.effective_passes.dtype == np.float64
     assert back.total_updates.dtype == np.int64
+    # diverged_rows: None round-trips as None, arrays as int64; payloads
+    # from pre-watchdog servers (no key at all) decode too
+    assert back.diverged_rows is None
+    marked = res._replace(diverged_rows=np.asarray([2, -1], np.int64))
+    wire = json.loads(json.dumps(result_to_dict(8, marked)))
+    assert wire["diverged_rows"] == [2, -1]
+    decoded = result_from_dict(wire)
+    assert decoded.diverged_rows.dtype == np.int64
+    np.testing.assert_array_equal(decoded.diverged_rows, [2, -1])
+    del wire["diverged_rows"]
+    assert result_from_dict(wire).diverged_rows is None
+
+
+def test_submit_ticket_trace_id_round_trips(obj):
+    """The satellite contract: ``submit`` surfaces the echoed X-Trace-Id
+    (as ``SubmitTicket.trace_id``, still an int for old callers), the id
+    resolves against ``/trace``, and ``result``/``watch`` accept it back
+    as an outgoing correlation header without changing behavior."""
+    from repro.obs.trace import disable_tracing, enable_tracing
+    svc = SweepService(obj, epochs=1, max_results=8)
+    enable_tracing()
+    try:
+        server = SweepServer(svc, policy=FlushPolicy(max_rows=64,
+                                                     max_delay_ms=25)).start()
+        try:
+            client = SweepClient(server.url, poll_s=5.0)
+            rid = client.submit(_specs([0, 1]), tenant="team-a")
+            assert isinstance(rid, int)           # old call sites keep working
+            assert rid.trace_id and rid.trace_id == svc.trace_id(rid)
+            # the ticket's trace id is the SAME id /trace serves the span
+            # tree under — the whole point of echoing it
+            res = client.result(rid, timeout=180, trace_id=rid.trace_id)
+            _assert_same(res, run_sweep(obj, 1, _specs([0, 1])))
+            tree = client.trace(rid.trace_id)
+            assert {"submit", "dispatch"} <= {s["name"] for s in tree["spans"]}
+            # watch() takes the same correlation header; with the bus off
+            # it answers instantly with no events and enabled=False
+            got = client.watch(cursor=0, timeout_s=0.0,
+                               trace_id=rid.trace_id)
+            assert got["events"] == [] and got["enabled"] is False
+        finally:
+            server.stop()
+    finally:
+        disable_tracing(clear=True)

@@ -294,6 +294,42 @@ def test_fused_engine_sharded_matches_vmap_unsharded(obj, mesh):
     _assert_same(base, shard_fused)
 
 
+def test_watchdog_cancel_row_sharded_survivors_bit_identical(obj, mesh):
+    """Divergence watchdog under the forced 8-device mesh, vmap AND fused
+    engines: the step_size=1e30 row NaNs on epoch 1 and is cancelled
+    (cancel_row), while every surviving row stays bit-identical to a
+    watchdog-off run — sharded and unsharded."""
+    from repro.obs.watchdog import Watchdog
+    from repro.service import SweepService
+
+    for engine_mode in ("vmap", "fused"):
+        good = [SweepSpec(scheme=SCHEMES[c % 3], step_size=0.5, tau=3,
+                          num_threads=4, inner_steps=25, seed=c,
+                          engine_mode=engine_mode)
+                for c in range(3)]
+        bad = SweepSpec(scheme="inconsistent", step_size=1e30, tau=3,
+                        num_threads=4, inner_steps=25, seed=99,
+                        engine_mode=engine_mode)
+        specs = good + [bad]
+
+        svc = SweepService(obj, epochs=2, mesh=mesh,
+                           watchdog=Watchdog(policy="cancel_row"))
+        rid = svc.submit(specs)
+        svc.flush()
+        got = svc.result(rid)
+
+        assert got.diverged_rows is not None
+        assert np.flatnonzero(got.diverged_rows >= 0).tolist() == [3]
+        assert got.epochs_per_row[3] == 0          # frozen at w0
+        assert np.isfinite(got.histories[3]).all()
+
+        ref_sharded = run_sweep(obj, 2, good, mesh=mesh)
+        ref_unsharded = run_sweep(obj, 2, good)
+        for ref in (ref_sharded, ref_unsharded):
+            np.testing.assert_array_equal(got.histories[:3], ref.histories)
+            np.testing.assert_array_equal(got.final_w[:3], ref.final_w)
+
+
 def test_model_axis_mesh_degrades_to_unsharded(obj):
     """A mesh without a >1 `data` axis (e.g. the 1×1 host mesh) falls back
     to the single-device path rather than erroring."""
